@@ -1,0 +1,133 @@
+"""Paper Table IV: normalized mean error of posit ops vs binary32 in DNN
+linear-algebra kernels on 32x32 matrices (GEMM, 3x3 conv, 4x4 avg pooling).
+
+Replays the paper's trace-parser methodology: run each kernel through the
+posit datapath (p<8,0> and p<16,2>), record every executed p.mul / p.add /
+p.div next to the binary32 result of the same operation, and report
+  e_op = mean(|r_posit - r_f32| / |r_f32|)
+per operation type per kernel — the exact Table IV layout.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ops as O
+from repro.core.convert import f32_to_posit
+from repro.core.decode import decode_to_f32
+from repro.core.types import P8_0, P16_2, PositConfig
+
+SIZE = 32
+
+
+class _Tracer:
+    """Accumulates per-op normalized errors (posit vs f32 twin)."""
+
+    def __init__(self, cfg: PositConfig):
+        self.cfg = cfg
+        self.errs = {"mul": [], "add": [], "div": []}
+
+    def _record(self, op, pres, fres):
+        pv = np.asarray(decode_to_f32(pres, self.cfg), np.float64)
+        fv = np.asarray(fres, np.float64)
+        mask = fv != 0
+        if mask.any():
+            self.errs[op].append(
+                np.abs((pv[mask] - fv[mask]) / fv[mask]))
+
+    def mul(self, pa, pb, fa, fb):
+        out = O.pmul(pa, pb, self.cfg)
+        self._record("mul", out, fa * fb)
+        return out
+
+    def add(self, pa, pb, fa, fb):
+        out = O.padd(pa, pb, self.cfg)
+        self._record("add", out, fa + fb)
+        return out
+
+    def div_scalar(self, pa, scalar: float, fa):
+        pb = f32_to_posit(jnp.full(np.shape(pa), scalar, jnp.float32), self.cfg)
+        out = O.pdiv(jnp.asarray(pa), pb, self.cfg, mode="poly")
+        self._record("div", out, fa / scalar)
+        return out
+
+    def nme(self):
+        return {op: (float(np.concatenate(v).mean()) if v else None)
+                for op, v in self.errs.items()}
+
+
+def _quant(x, cfg):
+    return f32_to_posit(jnp.asarray(x, jnp.float32), cfg)
+
+
+def gemm_trace(cfg: PositConfig, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(SIZE, SIZE)).astype(np.float32)
+    Bm = rng.normal(size=(SIZE, SIZE)).astype(np.float32)
+    tr = _Tracer(cfg)
+    pA, pB = _quant(A, cfg), _quant(Bm, cfg)
+    fA = np.asarray(decode_to_f32(pA, cfg))      # f32 twin starts from the
+    fB = np.asarray(decode_to_f32(pB, cfg))      # same representable values
+    psum = _quant(np.zeros((SIZE, SIZE)), cfg)
+    fsum = np.zeros((SIZE, SIZE), np.float32)
+    for k in range(SIZE):
+        pm = tr.mul(pA[:, k:k+1], pB[k:k+1, :], fA[:, k:k+1], fB[k:k+1, :])
+        fm = fA[:, k:k+1] * fB[k:k+1, :]
+        psum = tr.add(psum, pm, fsum, fm)
+        fsum = fsum + fm
+    return tr.nme()
+
+
+def conv3x3_trace(cfg: PositConfig, seed=1):
+    rng = np.random.default_rng(seed)
+    img = rng.normal(size=(SIZE + 2, SIZE + 2)).astype(np.float32)
+    filt = rng.normal(size=(3, 3)).astype(np.float32)
+    tr = _Tracer(cfg)
+    pI, pF = _quant(img, cfg), _quant(filt, cfg)
+    fI = np.asarray(decode_to_f32(pI, cfg))
+    fF = np.asarray(decode_to_f32(pF, cfg))
+    psum = _quant(np.zeros((SIZE, SIZE)), cfg)
+    fsum = np.zeros((SIZE, SIZE), np.float32)
+    for di in range(3):
+        for dj in range(3):
+            tile_p = pI[di:di+SIZE, dj:dj+SIZE]
+            tile_f = fI[di:di+SIZE, dj:dj+SIZE]
+            pm = tr.mul(tile_p, pF[di, dj], tile_f, fF[di, dj])
+            fm = tile_f * fF[di, dj]
+            psum = tr.add(psum, pm, fsum, fm)
+            fsum = fsum + fm
+    return tr.nme()
+
+
+def avgpool4x4_trace(cfg: PositConfig, seed=2):
+    rng = np.random.default_rng(seed)
+    img = rng.normal(size=(SIZE, SIZE)).astype(np.float32)
+    tr = _Tracer(cfg)
+    pI = _quant(img, cfg)
+    fI = np.asarray(decode_to_f32(pI, cfg))
+    o = SIZE // 4
+    pview = jnp.asarray(pI).reshape(o, 4, o, 4).transpose(0, 2, 1, 3).reshape(o, o, 16)
+    fview = fI.reshape(o, 4, o, 4).transpose(0, 2, 1, 3).reshape(o, o, 16)
+    psum, fsum = pview[..., 0], fview[..., 0]
+    for t in range(1, 16):
+        psum = tr.add(psum, pview[..., t], fsum, fview[..., t])
+        fsum = fsum + fview[..., t]
+    tr.div_scalar(psum, 16.0, fsum)
+    return tr.nme()
+
+
+def table4() -> dict:
+    out = {}
+    for task, fn in (("conv3x3", conv3x3_trace), ("gemm", gemm_trace),
+                     ("avgpool4x4", avgpool4x4_trace)):
+        out[task] = {}
+        for cfg in (P8_0, P16_2):
+            out[task][str(cfg)] = fn(cfg)
+    return out
+
+
+def run(report):
+    import time
+    t0 = time.time()
+    t4 = table4()
+    report("table4_linear_algebra_nme", (time.time() - t0) * 1e6, t4)

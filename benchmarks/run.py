@@ -1,0 +1,68 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Prints ``name,us_per_call,derived`` CSV rows and dumps the full structured
+results to experiments/bench_results.json.
+
+Modules <-> paper artifacts:
+    division_accuracy    Table II  (+ eq. 12-13 constants re-derivation)
+    linear_algebra_error Table IV
+    dnn_accuracy         Fig. 7/8 (synthetic-data proxy; see module docstring)
+    throughput           Table V / §VIII-A (TPU-transferable parts)
+    roofline             EXPERIMENTS.md §Roofline assembler (from dry-run)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS = {}
+
+
+def _report(name: str, us_per_call: float, derived):
+    RESULTS[name] = derived
+    compact = json.dumps(derived, default=str)
+    if len(compact) > 160:
+        compact = compact[:157] + "..."
+    print(f"{name},{us_per_call:.1f},{compact}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (division_accuracy, dnn_accuracy,
+                            linear_algebra_error, roofline, throughput)
+    modules = {
+        "division_accuracy": division_accuracy,
+        "linear_algebra_error": linear_algebra_error,
+        "dnn_accuracy": dnn_accuracy,
+        "throughput": throughput,
+        "roofline": roofline,
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        try:
+            mod.run(_report)
+        except Exception as e:  # keep the suite running; record the failure
+            _report(name + "_ERROR", 0.0, f"{type(e).__name__}: {e}")
+
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench_results.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(RESULTS, f, indent=1, default=str)
+    print(f"# full results -> {out}")
+
+
+if __name__ == "__main__":
+    main()

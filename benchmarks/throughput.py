@@ -1,0 +1,80 @@
+"""Paper Table V + §VIII-A throughput — mapped to what a TPU target can show.
+
+The FPGA numbers (mW, 33->132 MOps/s via SIMD) do not transfer to TPU
+silicon; the transferable claims are measured instead:
+  * SIMD lane scaling (C4): posit8 payloads are 4x denser than f32 — ops/s
+    of the vectorized datapath on this host, p8 vs p16 vs f32 mul.
+  * storage-bandwidth win (the serving roofline mover): bytes/element of
+    weights+KV for each format.
+  * kernel throughput of the posit GEMM dispatch path (CPU jnp; the Pallas
+    kernel itself is TPU-target and validated in interpret mode by tests).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as O
+from repro.core.convert import f32_to_posit
+from repro.core.types import P8_2, P16_2
+from repro.kernels import ref as kref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters
+
+
+def elementwise_throughput(n: int = 1 << 20) -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    for cfg, dt in ((P8_2, jnp.int8), (P16_2, jnp.int16)):
+        a = jnp.asarray(rng.integers(-100, 100, n), dt)
+        b = jnp.asarray(rng.integers(-100, 100, n), dt)
+        for op, fn in (("add", O.padd), ("mul", O.pmul)):
+            f = jax.jit(lambda x, y, fn=fn, cfg=cfg: fn(x, y, cfg))
+            dt_s = _time(f, a, b)
+            out[f"{cfg}_{op}_mops"] = round(n / dt_s / 1e6, 1)
+        f = jax.jit(lambda x, y, cfg=cfg: O.pdiv(x, y, cfg, mode="poly"))
+        out[f"{cfg}_div_mops"] = round(n / _time(f, a, b) / 1e6, 1)
+    af = jnp.asarray(rng.normal(size=n), jnp.float32)
+    bf = jnp.asarray(rng.normal(size=n), jnp.float32)
+    f = jax.jit(lambda x, y: x * y)
+    out["f32_mul_mops"] = round(n / _time(f, af, bf) / 1e6, 1)
+    return out
+
+
+def gemm_throughput(m=512, k=512, n=512) -> dict:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w16 = f32_to_posit(jnp.asarray(rng.normal(size=(k, n)), jnp.float32), P16_2)
+    w8 = f32_to_posit(jnp.asarray(rng.normal(size=(k, n)), jnp.float32), P8_2)
+    wf = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    flops = 2 * m * k * n
+    out = {}
+    f = jax.jit(lambda a, b: kref.posit_gemm_ref(a, b, cfg_a=None, cfg_b=P16_2))
+    out["pw16_gemm_gflops"] = round(flops / _time(f, x, w16) / 1e9, 2)
+    f = jax.jit(lambda a, b: kref.posit_gemm_ref(a, b, cfg_a=None, cfg_b=P8_2))
+    out["pw8_gemm_gflops"] = round(flops / _time(f, x, w8) / 1e9, 2)
+    f = jax.jit(lambda a, b: a @ b)
+    out["f32_gemm_gflops"] = round(flops / _time(f, x, wf) / 1e9, 2)
+    out["w16_bytes_per_elem"] = 2
+    out["w8_bytes_per_elem"] = 1
+    out["f32_bytes_per_elem"] = 4
+    return out
+
+
+def run(report):
+    t0 = time.time()
+    e = elementwise_throughput()
+    report("elementwise_throughput", (time.time() - t0) * 1e6, e)
+    t0 = time.time()
+    g = gemm_throughput()
+    report("gemm_throughput", (time.time() - t0) * 1e6, g)

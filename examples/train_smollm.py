@@ -1,0 +1,54 @@
+"""End-to-end driver: train a ~100M-class LM for a few hundred steps with
+posit16 QAT weights, checkpoint/resume, then compare against the binary32
+baseline — the LM-scale version of the paper's Fig. 7 experiment.
+
+Run:  PYTHONPATH=src python examples/train_smollm.py [--steps 300]
+(CPU: a reduced-width smollm family config; the full config is exercised by
+the production dry-run.)
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.core.types import P16_2
+from repro.data.pipeline import DataConfig
+from repro.distributed.fault_tolerance import RestartPolicy
+from repro.models.transformer import ModelConfig
+from repro.optim.adamw import OptConfig
+from repro.quant.policy import PositPolicy
+from repro.training.trainer import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--posit", action="store_true", default=True)
+    ap.add_argument("--no-posit", dest="posit", action="store_false")
+    args = ap.parse_args()
+
+    # ~M-scale smollm-family config sized for a CPU example; same code path
+    # as the 256-chip launch (launch/train.py)
+    cfg = ModelConfig(
+        "smollm-mini", n_layers=6, d_model=256, n_heads=8, n_kv=4,
+        d_ff=768, vocab=2048,
+        policy=PositPolicy(weights=P16_2) if args.posit else PositPolicy())
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        __import__("repro.models.transformer", fromlist=["init_params"])
+        .init_params(jax.random.PRNGKey(0), cfg)))
+    print(f"[example] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"posit={'p16 QAT' if args.posit else 'off (binary32)'}")
+
+    opt = OptConfig(lr_peak=3e-3, warmup_steps=30, total_steps=args.steps)
+    data = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=16)
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        params, _, hist = train_loop(
+            cfg, opt, data, args.steps, ckpt_dir=ckpt,
+            policy=RestartPolicy(ckpt_every=100), log_every=25)
+    print(f"[example] loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

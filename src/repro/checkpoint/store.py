@@ -1,0 +1,97 @@
+"""Atomic, manifest-verified checkpointing (numpy-backed).
+
+Fault-tolerance contract (DESIGN.md §5):
+  * writes go to  <dir>/step_<N>.tmp/  and are renamed to  step_<N>/  only
+    after every leaf and the manifest hash are on disk — a killed writer
+    leaves a .tmp dir that restore ignores;
+  * restore scans for the newest *valid* step (manifest present, hash
+    matches, all leaves load) and falls back to older steps on corruption;
+  * the data pipeline is seekable (data/pipeline.py), so params+opt_state+
+    step is the complete training state: restart is exact.
+
+At fleet scale each host writes its own param shards (per-leaf files here —
+process-local stand-in documented in DESIGN.md); the manifest carries the
+pytree structure so the restore side rebuilds any sharding layout.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _leaf_files(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(final):        # idempotent: step already published
+        return final
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = _leaf_files(tree)
+    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    h = hashlib.sha256()
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        fn = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        h.update(arr.tobytes()[:4096])          # prefix hash: cheap + catches truncation
+        manifest["leaves"].append({"file": fn, "dtype": str(arr.dtype),
+                                   "shape": list(arr.shape)})
+    manifest["hash"] = h.hexdigest()
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, final)                       # atomic publish
+
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def _try_load(path: str, example_tree):
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    _, treedef = jax.tree_util.tree_flatten(example_tree)
+    leaves = []
+    h = hashlib.sha256()
+    for spec in manifest["leaves"]:
+        arr = np.load(os.path.join(path, spec["file"]))
+        if str(arr.dtype) != spec["dtype"] or list(arr.shape) != spec["shape"]:
+            raise IOError(f"leaf mismatch in {path}: {spec}")
+        h.update(arr.tobytes()[:4096])
+        leaves.append(arr)
+    if h.hexdigest() != manifest["hash"]:
+        raise IOError(f"hash mismatch in {path}")
+    return manifest["step"], jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_latest(ckpt_dir: str, example_tree):
+    """Returns (step, tree) from the newest valid checkpoint, or (None, None)."""
+    if not os.path.isdir(ckpt_dir):
+        return None, None
+    steps = sorted((d for d in os.listdir(ckpt_dir)
+                    if d.startswith("step_") and not d.endswith(".tmp")),
+                   reverse=True)
+    for d in steps:
+        try:
+            return _try_load(os.path.join(ckpt_dir, d), example_tree)
+        except Exception as e:  # corrupted/partial: fall back to older
+            print(f"[checkpoint] skipping {d}: {e}")
+    return None, None

@@ -1,0 +1,36 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+LeNet-5 workload).  get_config(name) -> full ModelConfig;
+get_smoke(name) -> reduced same-family config for CPU smoke tests.
+"""
+from repro.configs import (gemma_2b, hubert_xlarge, internlm2_20b,
+                           olmoe_1b_7b, phi_3_vision_4_2b, qwen1_5_110b,
+                           qwen3_moe_235b_a22b, recurrentgemma_9b, rwkv6_3b,
+                           smollm_360m)
+from repro.configs.shapes import SHAPES, ShapeSpec, cells, skip_reason
+
+_MODULES = {
+    "internlm2-20b": internlm2_20b,
+    "gemma-2b": gemma_2b,
+    "smollm-360m": smollm_360m,
+    "qwen1.5-110b": qwen1_5_110b,
+    "rwkv6-3b": rwkv6_3b,
+    "hubert-xlarge": hubert_xlarge,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b,
+    "phi-3-vision-4.2b": phi_3_vision_4_2b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str, **overrides):
+    return _MODULES[name].full(**overrides)
+
+
+def get_smoke(name: str, **overrides):
+    return _MODULES[name].smoke(**overrides)
+
+
+def all_configs(**overrides):
+    return {a: get_config(a, **overrides) for a in ARCHS}

@@ -1,0 +1,19 @@
+"""gemma-2b [arXiv:2403.08295; hf] — dense MQA decoder, GeGLU, head_dim=256.
+
+18L d_model=2048 8H (kv=1, MQA) d_ff=16384 vocab=256000; embeddings scaled
+by sqrt(d_model) (Gemma convention).
+"""
+from repro.models.transformer import ModelConfig
+
+
+def full(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="gemma-2b", n_layers=18, d_model=2048, n_heads=8, n_kv=1,
+        d_ff=16384, vocab=256000, head_dim=256, act="geglu",
+        embed_scale=True, **ov)
+
+
+def smoke(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="gemma-2b-smoke", n_layers=3, d_model=96, n_heads=4, n_kv=1,
+        d_ff=192, vocab=512, head_dim=32, act="geglu", embed_scale=True, **ov)

@@ -1,0 +1,24 @@
+"""hubert-xlarge [arXiv:2106.07447; unverified] — audio encoder-only.
+
+48L d_model=1280 16H d_ff=5120 vocab=504 (cluster targets), GELU, LayerNorm,
+bidirectional.  The conv frame frontend is a STUB per the assignment:
+input_specs provide precomputed frame embeddings [B, S, d_model].
+No decode step (encoder-only): decode shapes skipped.
+"""
+from repro.models.transformer import ModelConfig
+
+
+def full(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", n_layers=48, d_model=1280, n_heads=16, n_kv=16,
+        d_ff=5120, vocab=504, act="gelu", norm="layernorm",
+        encoder_only=True, input_mode="embeddings", tie_embeddings=False,
+        **ov)
+
+
+def smoke(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge-smoke", n_layers=3, d_model=96, n_heads=4,
+        n_kv=4, d_ff=192, vocab=64, act="gelu", norm="layernorm",
+        encoder_only=True, input_mode="embeddings", tie_embeddings=False,
+        **ov)

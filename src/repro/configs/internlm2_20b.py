@@ -1,0 +1,17 @@
+"""internlm2-20b [arXiv:2403.17297; hf] — dense GQA decoder.
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92544, SwiGLU, RMSNorm.
+"""
+from repro.models.transformer import ModelConfig
+
+
+def full(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-20b", n_layers=48, d_model=6144, n_heads=48, n_kv=8,
+        d_ff=16384, vocab=92544, act="swiglu", rope_theta=1e6, **ov)
+
+
+def smoke(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-20b-smoke", n_layers=4, d_model=128, n_heads=8,
+        n_kv=2, d_ff=256, vocab=512, act="swiglu", **ov)

@@ -1,0 +1,52 @@
+"""LeNet-5-class CNN — the paper's own DNN benchmark (§VII-A, Fig. 7).
+
+Not one of the ten assigned LM archs: this is the paper-native workload used
+by benchmarks/dnn_accuracy.py to reproduce the posit-vs-binary32 accuracy
+comparison on 32x32 images (MNIST/CIFAR10-sized, synthetic data offline).
+Implemented directly in JAX (conv -> pool -> conv -> pool -> fc x3).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def init_lenet(key, n_classes: int = 10, in_ch: int = 1):
+    ks = jax.random.split(key, 5)
+    he = lambda k, shape, fan: jax.random.normal(k, shape, jnp.float32) * (2.0 / fan) ** 0.5
+    return {
+        "c1": he(ks[0], (5, 5, in_ch, 6), 25 * in_ch),
+        "c2": he(ks[1], (5, 5, 6, 16), 25 * 6),
+        "f1": he(ks[2], (16 * 25, 120), 400),
+        "f2": he(ks[3], (120, 84), 120),
+        "f3": he(ks[4], (84, n_classes), 84),
+    }
+
+
+def lenet_forward(params, x, matmul=None):
+    """x [B, 32, 32, C].  `matmul(a, b)` overrides dense/conv contractions
+    (used to run the network through the posit datapath)."""
+    mm = matmul or (lambda a, b: a @ b)
+
+    def conv(x, w):
+        # im2col so the conv goes through the same (posit) GEMM path
+        B, H, W, Cin = x.shape
+        kh, kw, _, Cout = w.shape
+        Ho, Wo = H - kh + 1, W - kw + 1
+        patches = jnp.stack([
+            x[:, i:i + Ho, j:j + Wo, :] for i in range(kh) for j in range(kw)
+        ], axis=3)                                  # [B,Ho,Wo,kh*kw,Cin]
+        patches = patches.reshape(B * Ho * Wo, kh * kw * Cin)
+        out = mm(patches, w.reshape(kh * kw * Cin, Cout))
+        return out.reshape(B, Ho, Wo, Cout)
+
+    def pool(x):  # 2x2 average pooling (the paper's pooling benchmark op)
+        B, H, W, C = x.shape
+        return x.reshape(B, H // 2, 2, W // 2, 2, C).mean(axis=(2, 4))
+
+    x = jax.nn.relu(conv(x, params["c1"]))
+    x = pool(x)
+    x = jax.nn.relu(conv(x, params["c2"]))
+    x = pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(mm(x, params["f1"]))
+    x = jax.nn.relu(mm(x, params["f2"]))
+    return mm(x, params["f3"])

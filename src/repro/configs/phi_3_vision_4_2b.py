@@ -1,0 +1,24 @@
+"""phi-3-vision-4.2b [hf:microsoft/Phi-3-vision-128k-instruct; hf] —
+phi3-mini text backbone + CLIP vision frontend.
+
+32L d_model=3072 32H (MHA kv=32) d_ff=8192 vocab=32064, SwiGLU.
+The CLIP patch frontend is a STUB per the assignment: input_specs provide
+precomputed patch embeddings [B, n_patches, d_model] prepended to tokens.
+"""
+from repro.models.transformer import ModelConfig
+
+N_PATCHES = 576  # 24x24 CLIP-L grid @ 336px
+
+
+def full(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b", n_layers=32, d_model=3072, n_heads=32,
+        n_kv=32, d_ff=8192, vocab=32064, act="swiglu",
+        input_mode="tokens+image", **ov)
+
+
+def smoke(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b-smoke", n_layers=3, d_model=96, n_heads=4,
+        n_kv=4, d_ff=192, vocab=512, act="swiglu",
+        input_mode="tokens+image", **ov)

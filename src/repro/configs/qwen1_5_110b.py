@@ -1,0 +1,17 @@
+"""qwen1.5-110b [hf:Qwen/Qwen1.5-110B; hf] — dense GQA decoder with QKV bias.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064, SwiGLU.
+"""
+from repro.models.transformer import ModelConfig
+
+
+def full(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-110b", n_layers=80, d_model=8192, n_heads=64, n_kv=8,
+        d_ff=49152, vocab=152064, act="swiglu", qkv_bias=True, **ov)
+
+
+def smoke(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-110b-smoke", n_layers=4, d_model=128, n_heads=8,
+        n_kv=2, d_ff=384, vocab=512, act="swiglu", qkv_bias=True, **ov)

@@ -1,0 +1,21 @@
+"""qwen3-moe-235b-a22b [hf:Qwen/Qwen3-235B-A22B; hf] — MoE, 128 experts
+top-8, the largest assigned model (~235B total / ~22B active).
+
+94L d_model=4096 64H (GQA kv=4) d_ff=1536 (per expert) vocab=151936;
+head_dim=128 (so H*hd = 8192 != d_model, faithful to Qwen3).
+"""
+from repro.models.transformer import ModelConfig, MoEConfig
+
+
+def full(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b", n_layers=94, d_model=4096, n_heads=64,
+        n_kv=4, d_ff=1536, vocab=151936, head_dim=128, act="swiglu",
+        moe=MoEConfig(128, 8), **ov)
+
+
+def smoke(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv=2, d_ff=64, vocab=512, head_dim=16, act="swiglu",
+        moe=MoEConfig(8, 2), **ov)

@@ -1,0 +1,24 @@
+"""recurrentgemma-9b [arXiv:2402.19427; unverified] — Griffin hybrid:
+RG-LRU recurrent blocks + local sliding-window attention, 1:2 ratio.
+
+38L (= 12 x [rglru, rglru, attn_local] + 2 rglru) d_model=4096 16H
+(kv=1, MQA) d_ff=12288 vocab=256000, GeGLU, window 2048.
+Sub-quadratic: runs the long_500k shape.
+"""
+from repro.models.transformer import ModelConfig
+
+
+def full(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b", n_layers=38, d_model=4096, n_heads=16,
+        n_kv=1, d_ff=12288, vocab=256000, head_dim=256, act="geglu",
+        block_pattern=("rglru", "rglru", "attn_local"), window=2048,
+        embed_scale=True, **ov)
+
+
+def smoke(**ov) -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b-smoke", n_layers=5, d_model=64, n_heads=4,
+        n_kv=1, d_ff=128, vocab=512, head_dim=16, act="geglu",
+        block_pattern=("rglru", "rglru", "attn_local"), window=32,
+        embed_scale=True, **ov)

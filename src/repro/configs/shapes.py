@@ -1,0 +1,45 @@
+"""Assigned input shapes and the (arch x shape) cell grid.
+
+LM shapes are seq_len x global_batch.  decode_* / long_* lower `serve_step`
+(one new token against a KV cache of seq_len), not `train_step`.
+Skip rules (recorded in DESIGN.md §4 / EXPERIMENTS.md §Dry-run):
+  * encoder-only archs have no decode step -> decode shapes skipped
+  * long_500k requires sub-quadratic attention -> full-attention archs skip
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def skip_reason(model_cfg, shape: ShapeSpec) -> str | None:
+    """None if the cell runs; otherwise the documented skip reason."""
+    if model_cfg.encoder_only and shape.kind == "decode":
+        return "encoder-only arch: no decode step"
+    subquadratic = all(k in ("rwkv6", "rglru", "attn_local")
+                       for k in model_cfg.block_pattern)
+    if shape.name == "long_500k" and not subquadratic:
+        return "pure full-attention arch: long_500k needs sub-quadratic attention"
+    return None
+
+
+def cells(configs: dict):
+    """Yield (arch_name, shape_name, model_cfg, shape, skip_reason)."""
+    for arch, cfg in configs.items():
+        for sname, shape in SHAPES.items():
+            yield arch, sname, cfg, shape, skip_reason(cfg, shape)

@@ -1,0 +1,28 @@
+"""Portable integer bit tricks shared by the jnp datapath and Pallas kernels.
+
+Pallas/Mosaic does not reliably lower `lax.clz`, so bit_length is computed
+from the exponent field of an f32 conversion — exact, branch-free, and made
+of ops every backend lowers (convert, bitcast, shift, compare, select).
+
+f32 conversion is exact for ints < 2^24; above that, rounding could carry
+into the next power of two and overstate bit_length by 1.  The two-step
+split (high 24 bits first) keeps it exact for the full non-negative int32
+range used by the posit datapath (values < 2^31).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _bl_small(y: jnp.ndarray) -> jnp.ndarray:
+    """bit_length for 0 <= y < 2^24 (exact f32 conversion)."""
+    f = y.astype(jnp.float32)
+    exp = ((f.view(jnp.int32) >> 23) & 0xFF) - 127
+    return jnp.where(y == 0, 0, exp + 1)
+
+
+def bit_length32(y: jnp.ndarray) -> jnp.ndarray:
+    """bit_length of non-negative int32 values (exact for y < 2^31)."""
+    y = jnp.asarray(y, dtype=jnp.int32)
+    hi = y >> 7
+    return jnp.where(hi != 0, _bl_small(hi) + 7, _bl_small(y))

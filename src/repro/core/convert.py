@@ -1,0 +1,52 @@
+"""float <-> posit conversions — the paper's PFCVT instructions (§VI).
+
+These enable the paper's deployment model: "binary32 numbers as frontend
+while maintaining posit computation as backend".  In the LM framework they
+are the quantize/dequantize primitives of the posit dtype policy.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.decode import decode, decode_to_f32, work_frac_bits
+from repro.core.encode import encode_fir, to_storage
+from repro.core.types import PositConfig
+
+
+def f32_to_posit(v, cfg: PositConfig) -> jnp.ndarray:
+    """Correctly-rounded float32 -> posit (RNE; NaN/Inf -> NaR; +-0 -> 0).
+
+    Single rounding: the f32 mantissa (24 bits) is wider than any posit<=16
+    fraction, and we keep all 24 bits through the encode stage.
+    """
+    v = jnp.asarray(v, dtype=jnp.float32)
+    i = v.view(jnp.int32)
+    s = (i >> 31) & 1
+    exp = (i >> 23) & 0xFF
+    mant = i & 0x7FFFFF
+    nar = exp == 0xFF                          # Inf/NaN -> NaR
+    zero = (i & 0x7FFFFFFF) == 0
+    # subnormals (exp==0, mant!=0) are below every posit<=16 minpos: map to a
+    # tiny te so encode saturates to minpos (posit never rounds nonzero to 0).
+    W = 23
+    te = jnp.where(exp == 0, jnp.int32(-200), exp - 127)
+    M = (jnp.int32(1) << W) | mant
+    out = encode_fir(s, te, M, W, jnp.zeros_like(M), cfg)
+    out = jnp.where(zero, 0, out)
+    out = jnp.where(nar, cfg.nar, out)
+    return to_storage(out, cfg)
+
+
+def posit_to_f32(p, cfg: PositConfig) -> jnp.ndarray:
+    """Exact posit -> float32 (PFCVT.S); NaR -> NaN."""
+    return decode_to_f32(p, cfg)
+
+
+def bf16_to_posit(v, cfg: PositConfig) -> jnp.ndarray:
+    return f32_to_posit(jnp.asarray(v).astype(jnp.float32), cfg)
+
+
+def posit_to_bf16(p, cfg: PositConfig) -> jnp.ndarray:
+    """posit -> bfloat16 (double rounding is innocuous: 8-bit bf16 fraction,
+    f32 intermediate is exact for n <= 16)."""
+    return decode_to_f32(p, cfg).astype(jnp.bfloat16)

@@ -1,0 +1,94 @@
+"""JAX posit decode — stage (i) of the FPPU pipeline (paper §IV, §V).
+
+Branch-free uint/int32 bit manipulation; vectorizes on the TPU VPU.  The
+decoded form is the paper's FIR: sign, total exponent te = 2^ES*k + e, and an
+integer significand.
+
+Significand convention (chosen so every downstream op fits int32):
+    M is an integer with value = M / 2^W(cfg) in [1, 2),  W(cfg) = n - 3.
+A posit<n,es> fraction has at most n-3-es significant bits, so the bottom
+3+es bits of the n-bit left-aligned fraction are always zero: dropping 3 is
+lossless.  For n=16: M has <= 14 bits, products <= 28 bits -> int32-safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bitutil import bit_length32
+from repro.core.types import PositConfig
+
+KLASS_ZERO = 0
+KLASS_NAR = 1
+KLASS_NORMAL = 2
+
+
+def work_frac_bits(cfg: PositConfig) -> int:
+    """W: fraction bits of the decoded integer significand (lossless)."""
+    return cfg.n - 3
+
+
+def as_bits32(p, cfg: PositConfig) -> jnp.ndarray:
+    """Any int array -> int32 N-bit patterns (zero-extended)."""
+    return jnp.asarray(p).astype(jnp.int32) & jnp.int32(cfg.mask)
+
+
+def classify(u: jnp.ndarray, cfg: PositConfig) -> jnp.ndarray:
+    klass = jnp.full(u.shape, KLASS_NORMAL, dtype=jnp.int32)
+    klass = jnp.where(u == 0, KLASS_ZERO, klass)
+    klass = jnp.where(u == cfg.nar, KLASS_NAR, klass)
+    return klass
+
+
+def decode(p, cfg: PositConfig):
+    """posit bits -> (klass, sign, te, M) int32 arrays.
+
+    M = significand with hidden bit at position W(cfg); don't-care for
+    ZERO/NAR lanes (callers mask via klass).
+    """
+    n, es = cfg.n, cfg.es
+    u = as_bits32(p, cfg)
+    klass = classify(u, cfg)
+
+    s = (u >> (n - 1)) & 1
+    absu = jnp.where(s == 1, (-u) & cfg.mask, u)
+    absu = jnp.where(klass == KLASS_NORMAL, absu, 1)  # keep shifts well-defined
+
+    x = (absu << 1) & cfg.mask                  # drop sign bit, regime at MSB
+    b = (x >> (n - 1)) & 1
+    y = jnp.where(b == 1, (~x) & cfg.mask, x)
+    # count the regime run: leading-identical-bits within the n-bit window
+    run = jnp.minimum(n - bit_length32(y), n - 1)
+    k = jnp.where(b == 1, run - 1, -run)
+
+    rem = (x << (run + 1)) & cfg.mask           # exponent+fraction, left-aligned
+    if es > 0:
+        e = rem >> (n - es)
+        frac = (rem << es) & cfg.mask
+    else:
+        e = jnp.zeros_like(rem)
+        frac = rem
+    te = k * cfg.useed_exp + e
+
+    W = work_frac_bits(cfg)
+    M = (jnp.int32(1) << W) | (frac >> 3)       # bottom 3+es fraction bits are 0
+    return klass, s, te, M
+
+
+def decode_to_f32(p, cfg: PositConfig) -> jnp.ndarray:
+    """Exact posit -> float32 (n <= 16: 14-bit significand, |te| <= 126).
+
+    NaR -> NaN, zero -> 0.  This is the PFCVT.S direction of the paper's ISA
+    extension and the in-kernel dequantization primitive for the GEMM path.
+    The f32 is assembled bit-by-bit (no ldexp/frexp) so the same code lowers
+    inside Pallas kernels.
+    """
+    if cfg.te_max > 126:
+        raise ValueError(f"{cfg}: te range exceeds f32 normal exponents")
+    klass, s, te, M = decode(p, cfg)
+    W = work_frac_bits(cfg)
+    mant23 = (M - (jnp.int32(1) << W)) << (23 - W)     # W <= 13 < 23
+    fbits = (s << 31) | ((te + 127) << 23) | mant23
+    v = fbits.view(jnp.float32)
+    v = jnp.where(klass == KLASS_ZERO, 0.0, v)
+    v = jnp.where(klass == KLASS_NAR, jnp.nan, v)
+    return v

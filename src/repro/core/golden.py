@@ -1,0 +1,573 @@
+"""Exact software golden model for posit arithmetic (numpy, int64 datapath).
+
+This is the reproduction of the paper's "software golden model for posit
+computation" (§V-A, §VII): every FPPU result — and every JAX/Pallas kernel in
+this repo — is validated against it.
+
+Exactness strategy
+------------------
+All operations are computed with *integer* mantissa arithmetic and a single
+round-to-nearest-even at the end, i.e. the mathematically exact posit result:
+
+* decode:   posit bits -> (sign, te, M) with M an (n+1)-bit integer
+            significand, value = M / 2^n  in [1, 2).  Exact.
+* add/sub:  operand alignment with sticky capture beyond n+3 bits.  Exact.
+* mul:      M1*M2 <= 2*(n+1) bits: int64-exact for n <= 16; python-int
+            fallback for wider formats.  Exact.
+* div:      integer long division with remainder -> sticky.  Exact.
+* fma:      exact product + aligned addend with sticky.  Exact.
+* quire:    arbitrary-precision python-int fixed-point accumulator (the
+            posit-standard quire semantics: no intermediate rounding).
+* encode:   regime/exponent/fraction assembly with G/R/S round-to-nearest-even
+            (paper Fig. 3) and saturation to maxpos/minpos (never to 0/NaR).
+
+The vectorized int64 paths cover n <= 16 (the paper's DNN formats); wider
+formats transparently fall back to an exact scalar path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import PositConfig
+
+# Classification codes shared with the JAX implementation.
+KLASS_ZERO = 0
+KLASS_NAR = 1
+KLASS_NORMAL = 2
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def _as_bits(p, cfg: PositConfig) -> np.ndarray:
+    """Canonicalize any int array to int64 N-bit patterns (unsigned view)."""
+    p = np.asarray(p)
+    return p.astype(np.int64) & cfg.mask
+
+
+def _bit_length(y: np.ndarray) -> np.ndarray:
+    """Vectorized bit_length for int64 values in [0, 2^32)."""
+    y = y.astype(np.int64)
+    safe = np.maximum(y, 1).astype(np.float64)
+    # exact for integers < 2^53; log2 never rounds across an integer boundary
+    # for y < 2^32 (max true distance to the boundary ~3.4e-10 >> 1 ulp).
+    bl = np.floor(np.log2(safe)).astype(np.int64) + 1
+    return np.where(y == 0, 0, bl)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def decode(p, cfg: PositConfig):
+    """posit bits -> (klass, sign, te, M).
+
+    M is the integer significand with hidden bit: value = M / 2^n in [1, 2).
+    For ZERO/NAR klass entries sign/te/M are don't-care (zeros).
+    """
+    u = _as_bits(p, cfg)
+    n, es = cfg.n, cfg.es
+    klass = np.full(u.shape, KLASS_NORMAL, dtype=np.int64)
+    klass = np.where(u == 0, KLASS_ZERO, klass)
+    klass = np.where(u == cfg.nar, KLASS_NAR, klass)
+
+    s = (u >> (n - 1)) & 1
+    absu = np.where(s == 1, (-u) & cfg.mask, u)
+    # guard specials so shifts below stay well-defined
+    absu = np.where(klass == KLASS_NORMAL, absu, 1)
+
+    x = (absu << 1) & cfg.mask                      # drop sign, left-align regime
+    b = (x >> (n - 1)) & 1
+    y = np.where(b == 1, (~x) & cfg.mask, x)
+    run = np.minimum(n - _bit_length(y), n - 1)      # regime run length l
+    k = np.where(b == 1, run - 1, -run)
+
+    rem = (x << (run + 1)) & cfg.mask                # exponent+fraction, left-aligned
+    e = (rem >> (n - es)) if es > 0 else np.zeros_like(rem)
+    frac = (rem << es) & cfg.mask                    # fraction left-aligned in n bits
+    te = k * cfg.useed_exp + e
+    M = (np.int64(1) << n) | frac                    # (n+1)-bit significand
+    return klass, s, te, M
+
+
+def decode_to_float64(p, cfg: PositConfig) -> np.ndarray:
+    """Exact real value of each posit (NaR -> nan). Requires |te_max| < 1023."""
+    if cfg.te_max >= 1023:
+        raise ValueError(f"{cfg} exceeds float64 exponent range")
+    klass, s, te, M = decode(p, cfg)
+    sig = M.astype(np.float64) * np.ldexp(1.0, -cfg.n)   # exact: M has <= 33 bits
+    v = np.ldexp(sig, te.astype(np.int32))
+    v = np.where(s == 1, -v, v)
+    v = np.where(klass == KLASS_ZERO, 0.0, v)
+    v = np.where(klass == KLASS_NAR, np.nan, v)
+    return v
+
+
+# --------------------------------------------------------------------------
+# encode (FIR -> posit), the paper's §IV-D normalization + Fig. 3 G/R/S RNE
+# --------------------------------------------------------------------------
+def _encode_fir(s, te, M, W, sticky, cfg: PositConfig) -> np.ndarray:
+    """Round-to-nearest-even encode of (-1)^s * 2^te * (M / 2^W), M in [2^W, 2^(W+1)).
+
+    All arrays int64; W is a python int (uniform working fraction width).
+    Saturates to maxpos/minpos; never rounds a nonzero value to zero or NaR.
+    """
+    n, es = cfg.n, cfg.es
+    s = np.asarray(s, dtype=np.int64)
+    te = np.asarray(te, dtype=np.int64)
+    M = np.asarray(M, dtype=np.int64)
+    sticky = np.asarray(sticky, dtype=np.int64)
+
+    k = te >> es                      # floor division (arithmetic shift)
+    e = te - (k << es)                # in [0, 2^es)
+
+    # regime field (paper eq. (2)): k>=0 -> (k+1) ones + stop 0; k<0 -> (-k) zeros + stop 1
+    k_pos = k >= 0
+    rlen = np.where(k_pos, k + 2, 1 - k)
+    regime = np.where(k_pos, ((np.int64(1) << np.minimum(k + 1, 62)) - 1) << 1, 1)
+
+    frac = M - (np.int64(1) << W)     # W-bit fraction (hidden bit removed)
+
+    nre = rlen + es                   # regime+exponent width
+    body_bits = n - 1
+
+    # ---- case A: fraction (partly) survives:  nre < n-1 ----
+    ffield = np.maximum(body_bits - nre, 0)
+    shiftA = W - ffield               # fraction bits discarded
+    shiftA_c = np.clip(shiftA, 1, 62)
+    keptA = frac >> shiftA_c
+    rA = (frac >> (shiftA_c - 1)) & 1
+    sA = ((frac & ((np.int64(1) << (shiftA_c - 1)) - 1)) != 0).astype(np.int64) | sticky
+    combined_re = (regime << es) | e
+    bodyA = (combined_re << ffield) | keptA
+
+    # ---- case B: regime+exp overflow the body:  nre >= n-1 ----
+    shiftB = np.clip(nre - body_bits, 0, 62)
+    bodyB = combined_re >> shiftB
+    rB = np.where(
+        shiftB > 0,
+        (combined_re >> np.maximum(shiftB - 1, 0)) & 1,
+        (frac >> (W - 1)) & 1,
+    )
+    lowmaskB = (np.int64(1) << np.maximum(shiftB - 1, 0)) - 1
+    s_from_re = np.where(shiftB > 0, (combined_re & lowmaskB) != 0, False)
+    s_from_frac = np.where(
+        shiftB > 0,
+        frac != 0,
+        (frac & ((np.int64(1) << (W - 1)) - 1)) != 0,
+    )
+    sB = (s_from_re | s_from_frac).astype(np.int64) | sticky
+
+    caseA = nre < body_bits
+    body = np.where(caseA, bodyA, bodyB)
+    r = np.where(caseA, rA, rB)
+    st = np.where(caseA, sA, sB)
+
+    # round-to-nearest-even on the monotone posit pattern: inc iff R & (S | G)
+    g = body & 1
+    body = body + (r & (st | g))
+
+    # saturation: pattern overflow past maxpos, or te outside representable range
+    body = np.minimum(body, cfg.maxpos_bits)
+    body = np.where(te > cfg.te_max, cfg.maxpos_bits, body)
+    body = np.where(te < cfg.te_min, cfg.minpos_bits, body)
+    # nonzero never rounds to zero (posit standard): bump to minpos
+    body = np.maximum(body, cfg.minpos_bits)
+
+    out = np.where(s == 1, (-body) & cfg.mask, body)
+    return out.astype(np.int64)
+
+
+def encode_from_float64(v, cfg: PositConfig) -> np.ndarray:
+    """Correctly-rounded float64 -> posit (paper's FCVT.P direction).
+
+    Exact RNE for n <= 16 by Figueroa's innocuous-double-rounding bound
+    (53 >= 2*max_frac+2); for n <= 32 the f64 mantissa is wider than any
+    posit fraction so the conversion itself is single-rounding and exact.
+    """
+    v = np.asarray(v, dtype=np.float64)
+    nar = ~np.isfinite(v)
+    zero = v == 0.0
+    s = (np.signbit(v)).astype(np.int64)
+    av = np.abs(np.where(nar | zero, 1.0, v))
+    m, ex = np.frexp(av)                       # av = m * 2^ex, m in [0.5, 1)
+    te = ex.astype(np.int64) - 1
+    W = 52
+    M = np.ldexp(m, W + 1).astype(np.int64)    # exact 53-bit integer mantissa
+    out = _encode_fir(s, te, M, W, np.zeros_like(M), cfg)
+    out = np.where(zero, 0, out)
+    out = np.where(nar, cfg.nar, out)
+    return out
+
+
+# --------------------------------------------------------------------------
+# exact arithmetic (vectorized int64, n <= 16; scalar exact fallback otherwise)
+# --------------------------------------------------------------------------
+def _specials2(ka, kb):
+    any_nar = (ka == KLASS_NAR) | (kb == KLASS_NAR)
+    return any_nar
+
+
+def padd(a, b, cfg: PositConfig) -> np.ndarray:
+    """Exact posit addition with a single final rounding (paper §IV-A)."""
+    if cfg.n > 16:
+        return _scalar_op(a, b, cfg, "add")
+    ka, sa, tea, Ma = decode(a, cfg)
+    kb, sb, teb, Mb = decode(b, cfg)
+    n = cfg.n
+
+    # order so |p1| >= |p2|  (compare (te, M))
+    swap = (teb > tea) | ((teb == tea) & (Mb > Ma))
+    s1 = np.where(swap, sb, sa); s2 = np.where(swap, sa, sb)
+    te1 = np.where(swap, teb, tea); te2 = np.where(swap, tea, teb)
+    M1 = np.where(swap, Mb, Ma); M2 = np.where(swap, Ma, Mb)
+
+    # working precision: mantissas at n bits + 3 guard bits
+    G = 3
+    M1w = M1 << G
+    M2w = M2 << G
+    d = te1 - te2
+    dc = np.clip(d, 0, n + G + 1)
+    M2s = M2w >> dc
+    sticky = ((M2w & ((np.int64(1) << dc) - 1)) != 0).astype(np.int64)
+
+    eff_sub = s1 != s2
+    mag = np.where(eff_sub, M1w - M2s - sticky * 0, M1w + M2s)
+    # subtraction: sticky bits reduce the magnitude below the truncated value;
+    # represent by (mag - 1) with sticky kept when sticky and exact borrow matter.
+    mag = np.where(eff_sub & (sticky == 1), mag - 1, mag)
+    st = sticky
+
+    W = n + G
+    # normalize into [2^W, 2^(W+1))
+    bl = _bit_length(np.maximum(mag, 1))
+    shift_left = (W + 1) - bl
+    sl = np.clip(shift_left, 0, 62)
+    sr = np.clip(-shift_left, 0, 62)
+    lost = (mag & ((np.int64(1) << sr) - 1)) != 0
+    Mn = np.where(shift_left >= 0, mag << sl, mag >> sr)
+    st = st | lost.astype(np.int64)
+    ten = te1 - shift_left
+
+    res = _encode_fir(s1, ten, np.maximum(Mn, np.int64(1) << W), W, st, cfg)
+
+    # exact zero result
+    res = np.where(mag == 0, 0, res)
+    # specials
+    res = np.where(ka == KLASS_ZERO, _as_bits(b, cfg), res)
+    res = np.where(kb == KLASS_ZERO, _as_bits(a, cfg), res)
+    res = np.where((ka == KLASS_ZERO) & (kb == KLASS_ZERO), 0, res)
+    res = np.where(_specials2(ka, kb), cfg.nar, res)
+    return res
+
+
+def pneg(a, cfg: PositConfig) -> np.ndarray:
+    u = _as_bits(a, cfg)
+    return np.where(u == cfg.nar, cfg.nar, (-u) & cfg.mask)
+
+
+def psub(a, b, cfg: PositConfig) -> np.ndarray:
+    return padd(a, pneg(b, cfg), cfg)
+
+
+def pmul(a, b, cfg: PositConfig) -> np.ndarray:
+    """Exact posit multiplication (paper §IV-B)."""
+    if cfg.n > 16:
+        return _scalar_op(a, b, cfg, "mul")
+    ka, sa, tea, Ma = decode(a, cfg)
+    kb, sb, teb, Mb = decode(b, cfg)
+    n = cfg.n
+    s = sa ^ sb
+    te = tea + teb
+    P = Ma * Mb                          # (2n+2)-bit product, value in [1, 4)
+    W = 2 * n
+    top = P >> (W + 1)                   # 1 if P >= 2 * 2^W
+    te = te + top
+    M = np.where(top == 1, P >> 1, P)
+    st = np.where(top == 1, (P & 1).astype(np.int64), 0)
+    res = _encode_fir(s, te, M, W, st, cfg)
+    res = np.where((ka == KLASS_ZERO) | (kb == KLASS_ZERO), 0, res)
+    res = np.where(_specials2(ka, kb), cfg.nar, res)
+    return res
+
+
+def pdiv(a, b, cfg: PositConfig) -> np.ndarray:
+    """Exact (correctly-rounded) posit division — the golden reference the
+    paper's Table II 'wrong %' is measured against."""
+    if cfg.n > 16:
+        return _scalar_op(a, b, cfg, "div")
+    ka, sa, tea, Ma = decode(a, cfg)
+    kb, sb, teb, Mb = decode(b, cfg)
+    n = cfg.n
+    s = sa ^ sb
+    te = tea - teb
+
+    # quotient of mantissas in [0.5, 2): compute to n+3 fraction bits + sticky
+    Wq = n + 3
+    num = Ma << Wq                       # <= (n+1) + (n+3) <= 36 bits
+    q = num // Mb
+    # q in (2^(Wq-1), 2^(Wq+1)): if quotient < 1, recompute one bit deeper so
+    # the pulled-in bit is a true quotient bit (not a zero fill).
+    small = q < (np.int64(1) << Wq)
+    num2 = np.where(small, num << 1, num)
+    q2 = num2 // Mb
+    rem2 = num2 - q2 * Mb
+    st = (rem2 != 0).astype(np.int64)
+    te = np.where(small, te - 1, te)
+
+    res = _encode_fir(s, te, q2, Wq, st, cfg)
+    res = np.where(ka == KLASS_ZERO, 0, res)
+    res = np.where(kb == KLASS_ZERO, cfg.nar, res)   # x/0 = NaR (posit standard)
+    res = np.where(_specials2(ka, kb), cfg.nar, res)
+    return res
+
+
+def precip(b, cfg: PositConfig) -> np.ndarray:
+    """Exact reciprocal 1/b (the FPPU's inversion op)."""
+    one = encode_from_float64(np.ones(np.shape(b)), cfg)
+    return pdiv(one, b, cfg)
+
+
+def pfma(a, b, c, cfg: PositConfig) -> np.ndarray:
+    """Exact fused multiply-add round(a*b + c) — the PFMADD instruction."""
+    if cfg.n > 16:
+        return _scalar_fma(a, b, c, cfg)
+    ka, sa, tea, Ma = decode(a, cfg)
+    kb, sb, teb, Mb = decode(b, cfg)
+    kc, sc, tec, Mc = decode(c, cfg)
+    n = cfg.n
+
+    sp = sa ^ sb
+    tep = tea + teb
+    P = Ma * Mb                          # value in [1,4) at scale 2^-2n
+    Wp = 2 * n
+    top = P >> (Wp + 1)
+    tep = tep + top
+    P = np.where(top == 1, P, P << 1)    # normalize to [2^(Wp+1), 2^(Wp+2)) scale Wp+1
+    Wp = Wp + 1                          # now P in [2^Wp, 2^(Wp+1)), exact (bit kept)
+
+    # addend at same fraction width
+    Cw = Mc << (Wp - n)
+
+    # align smaller operand to larger (by te), capture sticky
+    p_big = (tep > tec) | ((tep == tec) & (P >= Cw))
+    s1 = np.where(p_big, sp, sc); s2 = np.where(p_big, sc, sp)
+    te1 = np.where(p_big, tep, tec); te2 = np.where(p_big, tec, tep)
+    M1 = np.where(p_big, P, Cw); M2 = np.where(p_big, Cw, P)
+
+    G = 3
+    M1w = M1 << G
+    M2w = M2 << G
+    d = np.clip(te1 - te2, 0, Wp + G + 2)
+    M2s = M2w >> d
+    sticky = ((M2w & ((np.int64(1) << d) - 1)) != 0).astype(np.int64)
+
+    eff_sub = s1 != s2
+    mag = np.where(eff_sub, M1w - M2s - 0, M1w + M2s)
+    mag = np.where(eff_sub & (sticky == 1), mag - 1, mag)
+
+    W = Wp + G
+    bl = _bit_length(np.maximum(mag, 1))
+    shift_left = (W + 1) - bl
+    sl = np.clip(shift_left, 0, 62)
+    sr = np.clip(-shift_left, 0, 62)
+    lost = (mag & ((np.int64(1) << sr) - 1)) != 0
+    Mn = np.where(shift_left >= 0, mag << sl, mag >> sr)
+    st = sticky | lost.astype(np.int64)
+    ten = te1 - shift_left
+
+    res = _encode_fir(s1, ten, np.maximum(Mn, np.int64(1) << W), W, st, cfg)
+    res = np.where(mag == 0, 0, res)
+
+    # specials: a*b zero -> result c; c zero -> result round(a*b)
+    ab_zero = (ka == KLASS_ZERO) | (kb == KLASS_ZERO)
+    c_zero = kc == KLASS_ZERO
+    res = np.where(ab_zero, _as_bits(c, cfg), res)
+    res = np.where(c_zero & ~ab_zero, pmul(a, b, cfg), res)
+    res = np.where(ab_zero & c_zero, 0, res)
+    nar = (ka == KLASS_NAR) | (kb == KLASS_NAR) | (kc == KLASS_NAR)
+    res = np.where(nar, cfg.nar, res)
+    return res
+
+
+# --------------------------------------------------------------------------
+# quire: exact fused dot product (posit-standard semantics)
+# --------------------------------------------------------------------------
+def quire_dot(a_vec, b_vec, cfg: PositConfig) -> int:
+    """Exact sum_i a_i*b_i rounded once to posit — arbitrary-precision quire.
+
+    Scalar (python-int) implementation; used as the oracle for the GEMM
+    kernels' MXU-f32 'quire analogue' accumulation.
+    """
+    a_vec = np.asarray(a_vec).reshape(-1)
+    b_vec = np.asarray(b_vec).reshape(-1)
+    ka, sa, tea, Ma = decode(a_vec, cfg)
+    kb, sb, teb, Mb = decode(b_vec, cfg)
+    if np.any((ka == KLASS_NAR) | (kb == KLASS_NAR)):
+        return cfg.nar
+    acc = 0                                   # value = acc * 2^scale
+    scale = 2 * (cfg.te_min - cfg.n) - 8      # below any product's LSB
+    for i in range(a_vec.shape[0]):
+        if ka[i] == KLASS_ZERO or kb[i] == KLASS_ZERO:
+            continue
+        m = int(Ma[i]) * int(Mb[i])           # scale 2^(te_a+te_b-2n)
+        ex = int(tea[i] + teb[i]) - 2 * cfg.n
+        acc += ((-1) ** int(sa[i] ^ sb[i])) * (m << (ex - scale))
+    if acc == 0:
+        return 0
+    s = 1 if acc < 0 else 0
+    mag = abs(acc)
+    bl = mag.bit_length()
+    te = bl - 1 + scale
+    W = 60
+    if bl - 1 >= W:
+        sh = bl - 1 - W
+        sticky = 1 if (mag & ((1 << sh) - 1)) != 0 else 0
+        M = mag >> sh
+    else:
+        sticky = 0
+        M = mag << (W - (bl - 1))
+    return _encode_scalar_bigint(s, te, M, W, sticky, cfg)
+
+
+def _encode_scalar_bigint(s, te, M, W, sticky, cfg: PositConfig) -> int:
+    """Arbitrary-precision scalar version of _encode_fir (python ints)."""
+    n, es = cfg.n, cfg.es
+    if te > cfg.te_max:
+        body = cfg.maxpos_bits
+    elif te < cfg.te_min:
+        body = cfg.minpos_bits
+    else:
+        k, e = te >> es, te - ((te >> es) << es)
+        if k >= 0:
+            rlen, regime = k + 2, (((1 << (k + 1)) - 1) << 1)
+        else:
+            rlen, regime = 1 - k, 1
+        frac = M - (1 << W)
+        nre = rlen + es
+        combined = (regime << es) | e
+        if nre < n - 1:
+            ffield = (n - 1) - nre
+            sh = W - ffield
+            if sh <= 0:  # working fraction narrower than the field: exact fit
+                body = (combined << ffield) | (frac << (-sh))
+                r, st = 0, sticky
+            else:
+                kept = frac >> sh
+                r = (frac >> (sh - 1)) & 1
+                st = int((frac & ((1 << (sh - 1)) - 1)) != 0) | sticky
+                body = (combined << ffield) | kept
+        else:
+            sh = nre - (n - 1)
+            body = combined >> sh
+            if sh > 0:
+                r = (combined >> (sh - 1)) & 1
+                st = int((combined & ((1 << (sh - 1)) - 1)) != 0) | int(frac != 0) | sticky
+            else:
+                r = (frac >> (W - 1)) & 1
+                st = int((frac & ((1 << (W - 1)) - 1)) != 0) | sticky
+        body += r & (st | (body & 1))
+        body = min(body, cfg.maxpos_bits)
+        body = max(body, cfg.minpos_bits)
+    return ((-body) & cfg.mask) if s else body
+
+
+# --------------------------------------------------------------------------
+# exact scalar fallback for n > 16 (python ints; slow, test-scale only)
+# --------------------------------------------------------------------------
+def _decode_scalar(u: int, cfg: PositConfig):
+    n, es = cfg.n, cfg.es
+    u &= cfg.mask
+    if u == 0:
+        return KLASS_ZERO, 0, 0, 0
+    if u == cfg.nar:
+        return KLASS_NAR, 0, 0, 0
+    s = (u >> (n - 1)) & 1
+    absu = ((-u) & cfg.mask) if s else u
+    x = (absu << 1) & cfg.mask
+    b = (x >> (n - 1)) & 1
+    y = ((~x) & cfg.mask) if b else x
+    run = min(n - y.bit_length(), n - 1)
+    k = (run - 1) if b else -run
+    rem = (x << (run + 1)) & cfg.mask
+    e = (rem >> (n - es)) if es > 0 else 0
+    frac = (rem << es) & cfg.mask
+    return KLASS_NORMAL, s, k * cfg.useed_exp + e, (1 << n) | frac
+
+
+def _scalar_op(a, b, cfg: PositConfig, op: str) -> np.ndarray:
+    a = np.atleast_1d(np.asarray(a)); b = np.atleast_1d(np.asarray(b))
+    a, b = np.broadcast_arrays(a, b)
+    out = np.zeros(a.shape, dtype=np.int64)
+    it = np.nditer(a, flags=["multi_index"])
+    n = cfg.n
+    for _ in it:
+        idx = it.multi_index
+        ka, sa, tea, Ma = _decode_scalar(int(a[idx]), cfg)
+        kb, sb, teb, Mb = _decode_scalar(int(b[idx]), cfg)
+        if ka == KLASS_NAR or kb == KLASS_NAR or (op == "div" and kb == KLASS_ZERO):
+            out[idx] = cfg.nar
+            continue
+        if op == "mul":
+            if ka == KLASS_ZERO or kb == KLASS_ZERO:
+                out[idx] = 0
+                continue
+            P, W, te = Ma * Mb, 2 * n, tea + teb
+            if P >> (W + 1):
+                te, st, P = te + 1, P & 1, P >> 1
+            else:
+                st = 0
+            out[idx] = _encode_scalar_bigint(sa ^ sb, te, P, W, st, cfg)
+        elif op == "div":
+            if ka == KLASS_ZERO:
+                out[idx] = 0
+                continue
+            Wq = n + 3
+            num = Ma << (Wq + 1)
+            q, r = divmod(num, Mb)
+            te = tea - teb - 1
+            if q >> (Wq + 1):
+                r |= q & 1
+                q >>= 1
+                te += 1
+            out[idx] = _encode_scalar_bigint(sa ^ sb, te, q, Wq, int(r != 0), cfg)
+        elif op == "add":
+            if ka == KLASS_ZERO:
+                out[idx] = int(b[idx]) & cfg.mask
+                continue
+            if kb == KLASS_ZERO:
+                out[idx] = int(a[idx]) & cfg.mask
+                continue
+            # exact via big ints at a common scale 2^(min(te)-n)
+            acc = ((-1) ** sa) * (Ma << max(tea - teb, 0)) + (
+                (-1) ** sb
+            ) * (Mb << max(teb - tea, 0))
+            if acc == 0:
+                out[idx] = 0
+                continue
+            base = min(tea, teb) - n
+            s = 1 if acc < 0 else 0
+            mag = abs(acc)
+            bl = mag.bit_length()
+            te = bl - 1 + base
+            W = max(bl - 1, 1)
+            out[idx] = _encode_scalar_bigint(
+                s, te, mag << (W - (bl - 1)), W, 0, cfg
+            )
+        else:
+            raise ValueError(op)
+    return out.reshape(np.shape(a))
+
+
+def _scalar_fma(a, b, c, cfg: PositConfig) -> np.ndarray:
+    a = np.atleast_1d(np.asarray(a)); b = np.atleast_1d(np.asarray(b)); c = np.atleast_1d(np.asarray(c))
+    a, b, c = np.broadcast_arrays(a, b, c)
+    out = np.zeros(a.shape, dtype=np.int64)
+    it = np.nditer(a, flags=["multi_index"])
+    for _ in it:
+        idx = it.multi_index
+        out[idx] = quire_dot(
+            np.array([a[idx], c[idx]]),
+            np.array([b[idx], encode_from_float64(np.array(1.0), cfg)]),
+            cfg,
+        )
+    return out

@@ -1,0 +1,54 @@
+"""SIMD lane packing — paper §VIII-A (C4).
+
+The FPPU packs 4 posit8 (or 2 posit16) operands into one 32-bit register and
+replicates the unit per lane, quadrupling/doubling throughput with the same
+opcode.  On TPU the VPU already processes int8 arrays at full lane density —
+the *storage layout* is the transferable part: these helpers provide the
+ISA-faithful packed-word view (used by the serving KV-cache layout and the
+gradient-compression collective, where payloads travel as int32 words).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import PositConfig
+
+
+def lanes(cfg: PositConfig) -> int:
+    """SIMD lanes per 32-bit word: 4 for posit8, 2 for posit16 (paper C4)."""
+    return 32 // cfg.storage_bits
+
+
+def pack_words(p: jnp.ndarray, cfg: PositConfig) -> jnp.ndarray:
+    """[..., L*k] posit storage ints -> [..., k] int32 packed words.
+
+    Lane 0 occupies the least-significant bits (matches the paper's register
+    convention: a single posit goes in the LSBs).
+    """
+    L = lanes(cfg)
+    b = cfg.storage_bits
+    if p.shape[-1] % L:
+        raise ValueError(f"last dim {p.shape[-1]} not divisible by {L} lanes")
+    u = p.astype(jnp.int32) & ((1 << b) - 1)
+    u = u.reshape(*p.shape[:-1], p.shape[-1] // L, L)
+    shifts = jnp.arange(L, dtype=jnp.int32) * b
+    return jnp.sum(u << shifts, axis=-1).astype(jnp.int32)
+
+
+def unpack_words(w: jnp.ndarray, cfg: PositConfig) -> jnp.ndarray:
+    """[..., k] int32 packed words -> [..., k*L] posit storage ints."""
+    L = lanes(cfg)
+    b = cfg.storage_bits
+    shifts = jnp.arange(L, dtype=jnp.int32) * b
+    u = (w[..., None] >> shifts) & ((1 << b) - 1)
+    # sign-extend the N-bit pattern into the storage dtype
+    u = (u << (32 - cfg.n)) >> (32 - cfg.n)
+    return u.astype(jnp.dtype(f"int{b}")).reshape(*w.shape[:-1], w.shape[-1] * L)
+
+
+def packed_map(op, w1: jnp.ndarray, w2: jnp.ndarray, cfg: PositConfig) -> jnp.ndarray:
+    """Apply a two-operand posit op lane-wise on packed words (same opcode,
+    L results per word — the paper's SIMD dispatch)."""
+    a = unpack_words(w1, cfg)
+    b = unpack_words(w2, cfg)
+    return pack_words(op(a, b, cfg), cfg)

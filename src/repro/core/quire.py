@@ -1,0 +1,41 @@
+"""Quire-style fused accumulation (paper Table I "Quire/Fused support").
+
+The posit standard quire is an exact fixed-point accumulator; the FPPU
+exposes it through PFMADD.  The TPU-native analogue: decode posits to exact
+f32 (lossless for n <= 16), accumulate dot products in the MXU's f32
+accumulator, round to posit once.  One rounding per reduction — the quire
+semantics — with the accumulator precision being f32 instead of exact
+fixed-point (deviation recorded in DESIGN.md §2).
+
+`quire_dot_exact` in core.golden is the arbitrary-precision oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.convert import f32_to_posit
+from repro.core.decode import decode_to_f32
+from repro.core.types import PositConfig
+
+
+def quire_matmul(a_bits: jnp.ndarray, b_bits: jnp.ndarray, cfg: PositConfig,
+                 out_posit: bool = True) -> jnp.ndarray:
+    """[m,k] x [k,n] posit matmul with single-rounding (quire) semantics.
+
+    Pure-jnp reference path; the Pallas kernel (kernels/posit_gemm.py) fuses
+    the decode into the tile pipeline.  Products are exact in f32
+    (<=14-bit mantissas); accumulation is f32 (MXU).
+    """
+    a = decode_to_f32(a_bits, cfg)
+    b = decode_to_f32(b_bits, cfg)
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return f32_to_posit(acc, cfg) if out_posit else acc
+
+
+def quire_dot(a_bits: jnp.ndarray, b_bits: jnp.ndarray, cfg: PositConfig,
+              out_posit: bool = True) -> jnp.ndarray:
+    """Fused dot product over the last axis with quire semantics."""
+    a = decode_to_f32(a_bits, cfg)
+    b = decode_to_f32(b_bits, cfg)
+    acc = jnp.sum(a * b, axis=-1, dtype=jnp.float32)
+    return f32_to_posit(acc, cfg) if out_posit else acc

@@ -1,0 +1,129 @@
+"""Posit format descriptors and FIR (Floating-point Intermediate Representation).
+
+The paper (§III) defines Posit<N, ES>: 1 sign bit, run-length-encoded regime,
+up to ES exponent bits, remaining bits fraction.  Decoded posits are carried
+through the datapath in the paper's FIR form  (s, te, 1.f)  where
+``te = 2^ES * k + e`` is the unbiased total exponent (§IV).
+
+Everything here is pure metadata — no jax import — so configs can be built
+anywhere (including before device initialisation in launch scripts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class PositConfig:
+    """Static description of a Posit<N, ES> format.
+
+    Attributes:
+      n:  total width in bits (4..32 supported; 8/16 are the paper's DNN formats).
+      es: maximum exponent field width in bits (0..4 swept in the paper's Table II).
+    """
+
+    n: int
+    es: int
+
+    def __post_init__(self) -> None:
+        if not (2 <= self.n <= 32):
+            raise ValueError(f"posit width must be in [2, 32], got {self.n}")
+        if not (0 <= self.es <= 6):
+            raise ValueError(f"posit es must be in [0, 6], got {self.es}")
+
+    # ---- derived constants (all python ints; usable in traced code) ----
+    @property
+    def mask(self) -> int:
+        """N-bit all-ones mask."""
+        return (1 << self.n) - 1
+
+    @property
+    def sign_bit(self) -> int:
+        return 1 << (self.n - 1)
+
+    @property
+    def nar(self) -> int:
+        """Not-a-Real: 1000...0 (two's complement -2^(N-1)); eq. (4)."""
+        return 1 << (self.n - 1)
+
+    @property
+    def useed_exp(self) -> int:
+        """log2(useed) = 2^ES; eq. (3)."""
+        return 1 << self.es
+
+    @property
+    def k_max(self) -> int:
+        """Maximum regime value (regime of N-2 ones + stop bit fills the word)."""
+        return self.n - 2
+
+    @property
+    def k_min(self) -> int:
+        """Minimum regime value of a *nonzero* posit.
+
+        Note: the paper (§IV-D) quotes -(N-1) as the clip bound for k'; the
+        encodable minimum for a nonzero pattern is -(N-2) (l = N-2 zeros +
+        stop bit; l = N-1 zeros is the zero word).  Clipping to either bound
+        produces the same minpos after saturation; we use the tight bound,
+        matching softposit and the 2022 standard (minpos = useed^(2-N)).
+        """
+        return -(self.n - 2)
+
+    @property
+    def te_max(self) -> int:
+        """Largest representable total exponent: maxpos = useed^k_max."""
+        return self.k_max * self.useed_exp
+
+    @property
+    def te_min(self) -> int:
+        return self.k_min * self.useed_exp
+
+    @property
+    def max_frac_bits(self) -> int:
+        """Fraction bits when the regime is shortest (len 2): N-1-2-ES, >= 0."""
+        return max(0, self.n - 3 - self.es)
+
+    @property
+    def maxpos_bits(self) -> int:
+        """Bit pattern of the largest positive posit: 0111...1."""
+        return self.mask >> 1
+
+    @property
+    def minpos_bits(self) -> int:
+        """Bit pattern of the smallest positive posit: 000...01."""
+        return 1
+
+    @property
+    def storage_bits(self) -> int:
+        """Smallest power-of-two container width (the int dtype we store in)."""
+        for w in (8, 16, 32):
+            if self.n <= w:
+                return w
+        raise AssertionError
+
+    @property
+    def storage_dtype_name(self) -> str:
+        return f"int{self.storage_bits}"
+
+    def __str__(self) -> str:  # matches the paper's P<N,ES> notation
+        return f"posit{self.n}es{self.es}"
+
+
+# The paper's headline formats (§VII-A, Table IV, Figs 7-10).
+P8_0 = PositConfig(8, 0)
+P8_2 = PositConfig(8, 2)
+P16_1 = PositConfig(16, 1)
+P16_2 = PositConfig(16, 2)
+P32_2 = PositConfig(32, 2)
+
+# posit standard (2022) fixes ES=2 for all widths; the paper sweeps ES for
+# Table II but uses <8,0>/<8,2>/<16,2> elsewhere.
+STANDARD = {8: P8_2, 16: P16_2, 32: P32_2}
+
+
+@lru_cache(maxsize=None)
+def table2_grid() -> tuple[PositConfig, ...]:
+    """The <N, ES> grid of the paper's Table II (division accuracy)."""
+    grid = [PositConfig(8, es) for es in range(0, 5)]
+    grid += [PositConfig(16, es) for es in range(0, 4)]
+    return tuple(grid)

@@ -1,0 +1,62 @@
+"""Deterministic, seekable synthetic token pipeline.
+
+Fault-tolerance contract: batch(step) is a pure function of (seed, step,
+shape) — no iterator state.  A restarted trainer resumes from checkpoint
+step s and regenerates exactly the batches it would have seen; elastic
+resizes (different data-parallel degree) re-derive per-host slices from the
+same global batch.  This is the property production pipelines get from
+tfds/grain checkpointable iterators, implemented here without external deps.
+
+The token distribution is a mixture of affine-recurrence sequences
+(x_{t+1} = a*x_t + b mod V, per-sequence (a, b)) plus noise — structured
+enough that a ~100M model visibly learns (examples/train_smollm.py), cheap
+enough to generate on the fly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.05
+
+
+def global_batch_at(step: int, cfg: DataConfig):
+    """Returns dict(tokens [B, S+1] int32) — inputs are [:, :-1], labels
+    [:, 1:].  Pure function of (cfg.seed, step)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    ka, kb, k0, kn, km = jax.random.split(key, 5)
+    B, S, V = cfg.global_batch, cfg.seq_len + 1, cfg.vocab
+    a = jax.random.randint(ka, (B, 1), 1, 64)
+    b = jax.random.randint(kb, (B, 1), 0, V)
+    x0 = jax.random.randint(k0, (B, 1), 0, V)
+
+    t = jnp.arange(S)[None, :]
+    # closed form of the affine recurrence would need modular powers; a short
+    # scan keeps it exact and jit-friendly
+    def step_fn(x, _):
+        nxt = (a[:, 0] * x + b[:, 0]) % V
+        return nxt, nxt
+    _, xs = jax.lax.scan(step_fn, x0[:, 0], None, length=S)
+    toks = xs.T                                        # [B, S]
+    noise_mask = jax.random.bernoulli(kn, cfg.noise, toks.shape)
+    noise_tok = jax.random.randint(km, toks.shape, 0, V)
+    toks = jnp.where(noise_mask, noise_tok, toks).astype(jnp.int32)
+    del t
+    return {"tokens": toks}
+
+
+def host_batch_at(step: int, cfg: DataConfig, host_id: int, num_hosts: int):
+    """Per-host slice of the global batch (elastic-safe: derived, not stored)."""
+    full = global_batch_at(step, cfg)
+    per = cfg.global_batch // num_hosts
+    return jax.tree_util.tree_map(
+        lambda x: x[host_id * per:(host_id + 1) * per], full)

@@ -1,0 +1,83 @@
+"""Posit-compressed collectives — the paper's number format as a gradient
+wire format (beyond-paper distributed-optimization trick, DESIGN.md §5).
+
+A ring all-reduce is reduce-scatter + all-gather, each moving ~N bytes per
+chip.  Summation must stay f32 (posit8/16 addition of many shards would
+round pathologically), but the *all-gather half carries final values* and
+tolerates posit quantization: encode the reduced shard to posit16/8, gather
+ints, decode locally.
+
+    allreduce_bytes(f32)            ~ 2 * 4N
+    reduce_scatter f32 + gather p16 ~ 4N + 2N   (-25%)
+    ... + gather p8                 ~ 4N + 1N   (-37.5%)
+
+Across the pod axis (the slow inter-pod links) gradients are *pre-reduced*
+in-pod in f32, so only the compressed cross-pod exchange touches DCN:
+cross-pod bytes drop 2x/4x — visible in the dry-run HLO collective sizes
+(EXPERIMENTS.md §Perf).
+
+These run inside shard_map; gradient summation correctness is preserved
+(quantization error enters once, after the exact f32 reduction, bounded by
+the posit RNE half-ulp — measured in tests/test_collectives.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.convert import f32_to_posit
+from repro.core.decode import decode_to_f32
+from repro.core.types import PositConfig
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, cfg: PositConfig):
+    """All-reduce of x over `axis_name` with a posit-compressed gather half.
+
+    Call inside shard_map.  x: any float array, identical shape per member.
+    Returns the (quantized) mean-preserving sum on every member.
+    """
+    n = jax.lax.psum(1, axis_name)
+    size = x.size
+    pad = (-size) % n
+    flat = jnp.pad(x.astype(jnp.float32).reshape(-1), (0, pad))
+    shards = flat.reshape(n, size // n if pad == 0 else (size + pad) // n)
+    # exact f32 reduction of my shard (reduce-scatter half)
+    idx = jax.lax.axis_index(axis_name)
+    mine = jax.lax.psum_scatter(shards, axis_name, scatter_dimension=0,
+                                tiled=False)
+    # compressed all-gather half: posit wire format
+    wire = f32_to_posit(mine, cfg)
+    gathered = jax.lax.all_gather(wire, axis_name, axis=0, tiled=False)
+    out = decode_to_f32(gathered, cfg).reshape(-1)[:size]
+    del idx
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def compressed_grad_sync(grads, axis_name: str, cfg: PositConfig | None):
+    """Apply compressed_psum leaf-wise to a gradient pytree (or plain psum
+    when cfg is None — the f32 baseline)."""
+    if cfg is None:
+        return jax.lax.psum(grads, axis_name)
+    return jax.tree_util.tree_map(
+        lambda g: compressed_psum(g, axis_name, cfg), grads)
+
+
+def cross_pod_grad_sync(grads, cfg: PositConfig | None, mesh,
+                        in_specs, data_axis: str = "data",
+                        pod_axis: str = "pod"):
+    """Two-level gradient sync for the multi-pod mesh: exact f32 psum over
+    the in-pod data axis, posit-compressed psum across pods (slow links).
+
+    grads must already be laid out per `in_specs`; runs one shard_map.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def sync(g):
+        g = jax.lax.psum(g, data_axis)                  # fast in-pod links, f32
+        return compressed_grad_sync(g, pod_axis, cfg)   # slow links, posit wire
+
+    return shard_map(sync, mesh=mesh, in_specs=in_specs,
+                     out_specs=in_specs, check_rep=False)(grads)

@@ -1,0 +1,67 @@
+"""Fault tolerance, straggler mitigation, elasticity — the runbook layer.
+
+What is implemented and exercised in this repo (CPU container):
+  * checkpoint/restart: atomic manifest-verified checkpoints
+    (checkpoint/store.py) + a seekable pipeline (data/pipeline.py) make the
+    (params, opt_state, step) triple the full training state; the trainer
+    (training/trainer.py) auto-resumes from the newest valid step, skipping
+    corrupted/partial directories.  tests/test_fault_tolerance.py kills a
+    run mid-flight and asserts bit-identical continuation.
+  * elastic data-parallel resize: per-host batches are *derived*
+    (host_batch_at(step, host_id, num_hosts)), so a restart with a different
+    data-axis size resumes the same global batch sequence; param shardings
+    are re-fit by sharding.param_pspecs against the new mesh (dims that no
+    longer divide fall back to replication rather than failing).
+
+What is designed-for and documented (needs real multi-host hardware):
+  * failure detection: on TPU pods, jax.distributed heartbeats surface node
+    loss as a NotFoundError on the next collective; the launcher
+    (launch/train.py --restart-on-failure) re-execs the process group and
+    resumes from the last checkpoint.  MTBF math: at 1000 nodes / 3-year
+    node MTBF, expect ~1 failure/day -> checkpoint every K steps such that
+    K * step_time << 1 day / overhead budget; default --ckpt-every covers
+    <=2% lost work at 30 s steps.
+  * straggler mitigation: synchronous SPMD cannot drop stragglers
+    mid-collective; mitigation is (a) the launcher's per-step watchdog
+    (--step-timeout) which treats a >p99.9 step as a failure and restarts
+    without the slow host, shrinking the data axis (elastic resume), and
+    (b) the pipeline's derived batches, which make that shrink consistent.
+  * hierarchical sync: cross-pod gradient traffic is pre-reduced in-pod and
+    posit-compressed (collectives.cross_pod_grad_sync), halving the bytes
+    crossing the slowest links.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    ckpt_every: int = 50
+    keep: int = 3
+    max_restarts: int = 100
+    step_timeout_s: float | None = None   # straggler watchdog (launcher-level)
+
+
+class StepWatchdog:
+    """Treat a stuck/straggling step as a failure (SIGALRM -> exception)."""
+
+    def __init__(self, timeout_s: float | None):
+        self.timeout_s = timeout_s
+
+    def __enter__(self):
+        if self.timeout_s:
+            signal.signal(signal.SIGALRM, self._fire)
+            signal.setitimer(signal.ITIMER_REAL, self.timeout_s)
+        return self
+
+    def _fire(self, signum, frame):
+        raise TimeoutError("step exceeded straggler watchdog timeout")
+
+    def __exit__(self, *exc):
+        if self.timeout_s:
+            signal.setitimer(signal.ITIMER_REAL, 0.0)
+        return False

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the posit datapath hot spots.
+
+Each kernel module pairs pl.pallas_call + explicit BlockSpec VMEM tiling
+with a pure-jnp oracle in ref.py; ops.py is the jit'd dispatch layer.
+"""
+from repro.kernels.ops import (attention, decode, divide, elementwise, gemm,
+                               encode, pw_matmul, use_pallas)
+
+__all__ = ["gemm", "pw_matmul", "elementwise", "divide", "decode", "encode",
+           "attention", "use_pallas"]

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: blockwise (flash) attention with posit KV-cache decode
+fused into the score/value matmuls.
+
+Serving is memory-bound on KV-cache reads; storing KV as posit16/posit8
+halves/quarters those bytes (paper C4/C6 applied to LMs — the central
+serving win measured in EXPERIMENTS.md §Perf).  The decode (stage (i) of
+the FPPU) happens on VMEM tiles right before the MXU, so HBM only ever sees
+the narrow ints.
+
+Standard online-softmax across KV blocks; supports causal masking with a
+query-position offset (decode steps: q_len << kv_len).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.decode import decode_to_f32
+from repro.core.types import PositConfig
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  cfg_kv, nkv, scale, causal, bq, bk, q_offset, kv_len):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0]
+    v = v_ref[0]
+    if cfg_kv is not None:
+        k = decode_to_f32(k, cfg_kv)
+        v = decode_to_f32(v, cfg_kv)
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = q_offset + pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kpos = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kpos < kv_len                             # mask KV padding
+    if causal:
+        valid = valid & (qpos >= kpos)
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...][:, :1]                        # (bq, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)                   # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+        p.sum(axis=1, keepdims=True), l_ref.shape)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+
+    @pl.when(kv_idx == nkv - 1)
+    def _done():
+        l = l_ref[...][:, :1]
+        o_ref[0] = acc_ref[...] / jnp.where(l == 0, 1.0, l)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg_kv", "causal", "bq", "bk", "interpret"),
+)
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    cfg_kv: PositConfig | None = None, causal: bool = True,
+                    bq: int = 128, bk: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q [BH, Sq, D] x k,v [BH, Skv, D] -> [BH, Sq, D].
+
+    k/v are posit storage ints when cfg_kv is given, else float.  The causal
+    mask assumes queries occupy the *last* Sq positions of the Skv context
+    (prefill: Sq == Skv; decode: Sq == 1).
+    """
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    bq_ = min(bq, max(8, sq))
+    bk_ = min(bk, skv)
+    pq = (-sq) % bq_
+    pk = (-skv) % bk_
+    # pad keys with zeros and mask them off via position bounds below; padded
+    # queries produce garbage rows that are sliced away.
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    sqp, skvp = sq + pq, skv + pk
+    grid = (bh, sqp // bq_, skvp // bk_)
+    scale = 1.0 / (d ** 0.5)
+    q_offset = skv - sq                       # causal alignment
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, cfg_kv=cfg_kv, nkv=grid[2],
+                          scale=scale, causal=causal, bq=bq_, bk=bk_,
+                          q_offset=q_offset, kv_len=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk_, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk_, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sqp, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 128), jnp.float32),
+            pltpu.VMEM((bq_, 128), jnp.float32),
+            pltpu.VMEM((bq_, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq, :]

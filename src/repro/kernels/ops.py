@@ -1,0 +1,76 @@
+"""Kernel dispatch: Pallas on TPU, pure-jnp reference path elsewhere.
+
+The model zoo calls these wrappers; the CPU dry-run/AOT compile lowers the
+jnp path (Pallas-for-TPU cannot lower on the CPU backend), real TPU runs
+take the fused kernels, and tests exercise both via interpret=True.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PositConfig
+from repro.kernels import flash_attention as _fa
+from repro.kernels import posit_codec as _codec
+from repro.kernels import posit_elementwise as _ew
+from repro.kernels import posit_gemm as _gemm
+from repro.kernels import ref as _ref
+
+
+def use_pallas() -> bool:
+    env = os.environ.get("REPRO_USE_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "tpu"
+
+
+def gemm(a, b, *, cfg_a: PositConfig | None, cfg_b: PositConfig | None,
+         cfg_out: PositConfig | None = None, out_posit: bool = False):
+    if use_pallas():
+        return _gemm.posit_gemm(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
+                                cfg_out=cfg_out, out_posit=out_posit)
+    return _ref.posit_gemm_ref(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
+                               cfg_out=cfg_out, out_posit=out_posit)
+
+
+def pw_matmul(x, w_bits, cfg: PositConfig):
+    """[..., k] @ posit-weight [k, n] -> f32 (the LM linear-layer hot path)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = gemm(x2, w_bits, cfg_a=None, cfg_b=cfg)
+    return out.reshape(*lead, w_bits.shape[-1])
+
+
+def elementwise(op: str, *inputs, cfg: PositConfig):
+    if use_pallas():
+        return _ew.elementwise(op, *inputs, cfg=cfg)
+    return _ref.elementwise_ref(op, *inputs, cfg=cfg)
+
+
+def divide(a, b, *, cfg: PositConfig, mode: str = "poly_corrected",
+           nr_rounds: int = 1):
+    if use_pallas():
+        return _ew.divide(a, b, cfg=cfg, mode=mode, nr_rounds=nr_rounds)
+    return _ref.divide_ref(a, b, cfg=cfg, mode=mode, nr_rounds=nr_rounds)
+
+
+def decode(p, cfg: PositConfig):
+    if use_pallas():
+        return _codec.decode_block(p, cfg)
+    return _ref.decode_ref(p, cfg)
+
+
+def encode(v, cfg: PositConfig):
+    if use_pallas():
+        return _codec.encode_block(v, cfg)
+    return _ref.encode_ref(v, cfg)
+
+
+def attention(q, k, v, *, cfg_kv: PositConfig | None = None,
+              causal: bool = True):
+    """[BH, Sq, D] attention over (possibly posit) KV."""
+    if use_pallas():
+        return _fa.flash_attention(q, k, v, cfg_kv=cfg_kv, causal=causal)
+    return _ref.flash_attention_ref(q, k, v, cfg_kv=cfg_kv, causal=causal)

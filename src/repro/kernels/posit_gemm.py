@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: posit GEMM with in-kernel decode and quire-style
+accumulation (the FPPU's PFMADD/quire datapath mapped onto the MXU).
+
+TPU adaptation of the paper's compute pipeline (DESIGN.md §2):
+  stage (i)  decode:      posit tiles (int8/int16) -> exact f32 in VMEM
+  stage (ii) compute:     MXU matmul, f32 accumulator = the quire analogue
+  stage (iii) normalize:  single RNE encode of the accumulator (optional)
+
+The Pallas grid pipeline double-buffers HBM->VMEM tile fetches across grid
+steps — the TPU realisation of the FPPU's 4-stage pipelining (§V).
+
+Because operands travel as 8/16-bit integers, HBM traffic is 1/4 / 1/2 of
+an f32 GEMM (the paper's SIMD-register-density argument, §VIII-A) — this is
+what moves the memory roofline term in EXPERIMENTS.md §Perf.
+
+Two kernels:
+  * posit_gemm:  A[posit] @ B[posit] -> f32 or posit
+  * pw_gemm:     A[f32/bf16] @ B[posit] -> f32   (posit-weight hot path)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.convert import f32_to_posit
+from repro.core.decode import decode_to_f32
+from repro.core.types import PositConfig
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int, value=0) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=value)
+    return x
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, cfg_a, cfg_b, nk, out_posit,
+                 cfg_out):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    if cfg_a is not None:
+        a = decode_to_f32(a, cfg_a)          # exact dequant, stage (i)
+    else:
+        a = a.astype(jnp.float32)
+    b = b_ref[...]
+    if cfg_b is not None:
+        b = decode_to_f32(b, cfg_b)
+    else:
+        b = b.astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        acc = acc_ref[...]
+        if out_posit:
+            o_ref[...] = f32_to_posit(acc, cfg_out)   # stage (iii): one rounding
+        else:
+            o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg_a", "cfg_b", "cfg_out", "out_posit", "bm", "bn",
+                     "bk", "interpret"),
+)
+def posit_gemm(a: jnp.ndarray, b: jnp.ndarray, *,
+               cfg_a: PositConfig | None, cfg_b: PositConfig | None,
+               cfg_out: PositConfig | None = None, out_posit: bool = False,
+               bm: int = 256, bn: int = 256, bk: int = 512,
+               interpret: bool = False) -> jnp.ndarray:
+    """[m,k] @ [k,n] with posit operands decoded in-kernel.
+
+    cfg_a/cfg_b None means that operand is already float.  Output is f32
+    (quire-accumulated) or posit bits when out_posit (single final rounding).
+    Block shapes: MXU-aligned multiples of 128; defaults sized so the f32
+    working set (a+b decoded + acc) stays < 2 MB of VMEM.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm_ = min(bm, max(8, m)); bn_ = min(bn, max(128, n)); bk_ = min(bk, k)
+    a = _pad_to(a, bm_, bk_)
+    b = _pad_to(b, bk_, bn_)
+    mp, kp = a.shape
+    _, np_ = b.shape
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+
+    if out_posit:
+        out_dtype = jnp.dtype(f"int{cfg_out.storage_bits}")
+    else:
+        out_dtype = jnp.float32
+
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, cfg_a=cfg_a, cfg_b=cfg_b, nk=grid[2],
+                          out_posit=out_posit, cfg_out=cfg_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+def pw_gemm(x: jnp.ndarray, w_bits: jnp.ndarray, cfg: PositConfig, *,
+            bm: int = 256, bn: int = 256, bk: int = 512,
+            interpret: bool = False) -> jnp.ndarray:
+    """Activations[f32/bf16, m x k] @ posit-weights[k x n] -> f32.
+
+    The LM forward/serving hot path: weights stream from HBM at posit width
+    and are decoded in VMEM right before the MXU.
+    """
+    return posit_gemm(x, w_bits, cfg_a=None, cfg_b=cfg, out_posit=False,
+                      bm=bm, bn=bn, bk=bk, interpret=interpret)

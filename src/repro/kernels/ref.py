@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the per-kernel golden models).
+
+Tests assert kernel(interpret=True) == ref to machine precision (bit-exact
+for integer-domain kernels, allclose for f32 accumulation order effects).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ops as pops
+from repro.core.convert import f32_to_posit
+from repro.core.decode import decode_to_f32
+from repro.core.types import PositConfig
+
+
+def posit_gemm_ref(a, b, *, cfg_a: PositConfig | None, cfg_b: PositConfig | None,
+                   cfg_out: PositConfig | None = None,
+                   out_posit: bool = False) -> jnp.ndarray:
+    af = decode_to_f32(a, cfg_a) if cfg_a is not None else a.astype(jnp.float32)
+    bf = decode_to_f32(b, cfg_b) if cfg_b is not None else b.astype(jnp.float32)
+    acc = jnp.dot(af, bf, preferred_element_type=jnp.float32)
+    return f32_to_posit(acc, cfg_out) if out_posit else acc
+
+
+def elementwise_ref(op: str, *inputs, cfg: PositConfig) -> jnp.ndarray:
+    fn = {"add": pops.padd, "sub": pops.psub, "mul": pops.pmul,
+          "fma": pops.pfma}[op]
+    return fn(*inputs, cfg)
+
+
+def divide_ref(a, b, *, cfg: PositConfig, mode: str = "poly_corrected",
+               nr_rounds: int = 1) -> jnp.ndarray:
+    return pops.pdiv(a, b, cfg, mode=mode, nr_rounds=nr_rounds)
+
+
+def decode_ref(p, cfg: PositConfig) -> jnp.ndarray:
+    return decode_to_f32(p, cfg)
+
+
+def encode_ref(v, cfg: PositConfig) -> jnp.ndarray:
+    return f32_to_posit(jnp.asarray(v).astype(jnp.float32), cfg)
+
+
+def flash_attention_ref(q, k, v, *, cfg_kv: PositConfig | None = None,
+                        causal: bool = True) -> jnp.ndarray:
+    """Naive softmax attention oracle. q [BH,Sq,D], k/v [BH,Skv,D]."""
+    qf = q.astype(jnp.float32)
+    kf = decode_to_f32(k, cfg_kv) if cfg_kv is not None else k.astype(jnp.float32)
+    vf = decode_to_f32(v, cfg_kv) if cfg_kv is not None else v.astype(jnp.float32)
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) / (d ** 0.5)
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vf)

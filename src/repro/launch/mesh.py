@@ -1,0 +1,25 @@
+"""Production mesh definition.
+
+Single pod: (data=16, model=16) = 256 chips (v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the pod axis composes
+with data for gradient reduction (lowest-traffic axis over the slowest
+links; cross-pod bytes further shrink via the posit-compressed collective).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (jax locks the device count on first backend init, and only
+dryrun.py sets the 512-device XLA flag).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for single-device runs (tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,95 @@
+"""Production training launcher.
+
+On a real TPU pod slice this is executed once per host:
+
+    python -m repro.launch.train --arch smollm-360m --steps 1000 \
+        --ckpt-dir gs://.../ckpts --mesh pod --restart-on-failure
+
+On this CPU container it drives the same code path on a 1x1 mesh (used by
+examples/ and the integration tests).  The mesh/sharding configuration is
+identical to what launch/dryrun.py proves compiles for the production mesh.
+
+Fault tolerance: --restart-on-failure re-enters the train loop after any
+exception, resuming from the newest valid checkpoint (the loop itself
+checkpoints every --ckpt-every steps and the data pipeline is seekable);
+--step-timeout arms the straggler watchdog (fault_tolerance.StepWatchdog).
+
+XLA flags for real hardware (latency-hiding overlap of the FSDP gathers —
+DESIGN.md §5) are exported here so runs inherit them:
+    --xla_tpu_enable_async_collective_fusion=true
+    --xla_tpu_enable_latency_hiding_scheduler=true
+    --xla_tpu_overlap_compute_collective_tc=true
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+TPU_XLA_FLAGS = (
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_overlap_compute_collective_tc=true"
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-sized)")
+    ap.add_argument("--posit", choices=["off", "p8", "p16"], default="p16")
+    ap.add_argument("--restart-on-failure", action="store_true")
+    ap.add_argument("--max-restarts", type=int, default=10)
+    ap.add_argument("--step-timeout", type=float, default=None)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_PLATFORMS", "") not in ("", "cpu"):
+        os.environ["XLA_FLAGS"] = (TPU_XLA_FLAGS + " "
+                                   + os.environ.get("XLA_FLAGS", ""))
+
+    from repro import configs
+    from repro.core.types import P8_2, P16_2
+    from repro.data.pipeline import DataConfig
+    from repro.distributed.fault_tolerance import RestartPolicy
+    from repro.optim.adamw import OptConfig
+    from repro.quant.policy import PositPolicy
+    from repro.training.trainer import train_loop
+
+    policy = {"off": PositPolicy(),
+              "p8": PositPolicy(weights=P8_2),
+              "p16": PositPolicy(weights=P16_2)}[args.posit]
+    get = configs.get_smoke if args.smoke else configs.get_config
+    cfg = get(args.arch, policy=policy)
+
+    opt_cfg = OptConfig(lr_peak=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                        total_steps=args.steps)
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                          global_batch=args.global_batch)
+    rp = RestartPolicy(ckpt_every=args.ckpt_every,
+                       step_timeout_s=args.step_timeout)
+
+    attempts = 0
+    while True:
+        try:
+            train_loop(cfg, opt_cfg, data_cfg, args.steps,
+                       ckpt_dir=args.ckpt_dir, policy=rp)
+            break
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:
+            attempts += 1
+            if not args.restart_on_failure or attempts > args.max_restarts:
+                raise
+            print(f"[launch] step failed ({type(e).__name__}: {e}); "
+                  f"restart {attempts}/{args.max_restarts} from latest ckpt")
+
+
+if __name__ == "__main__":
+    main()

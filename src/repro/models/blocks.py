@@ -1,0 +1,360 @@
+"""Transformer building blocks — pure functional JAX (params are pytrees).
+
+Conventions:
+  * params: nested dicts of jnp arrays; init_* functions build them from a
+    PRNG key; apply functions are pure.
+  * activations f32 (dry-run/CPU) or bf16 via ModelConfig.dtype; matmuls
+    accumulate f32.
+  * posit weight policy: when cfg.policy.weights is set, weight matrices go
+    through posit_cast_ste (training, QAT semantics) so the forward sees
+    exactly the deployed posit values.  Serving uses pre-quantized int
+    weights via kernels.pw_matmul.
+  * attention is blockwise (flash-style online softmax) in pure jnp —
+    O(S) memory, scan-based — so 32k prefill lowers without an S x S buffer;
+    the Pallas kernel path replaces it on real TPUs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PositConfig
+from repro.quant.policy import PositPolicy, posit_cast_ste
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(x, p: Params, eps: float = 1e-6):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h * p["scale"]).astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(x, p: Params, eps: float = 1e-6):
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean((h - mu) ** 2, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# linear with posit weight policy
+# --------------------------------------------------------------------------
+def init_linear(key, d_in: int, d_out: int, bias: bool = False) -> Params:
+    p = {"w": _dense_init(key, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(x, p: Params, policy: PositPolicy | None = None):
+    w = p["w"]
+    if w.dtype in (jnp.int8, jnp.int16):
+        # serving path: pre-quantized posit weights, decode fused in kernel
+        from repro.kernels import ops as kops
+        assert policy is not None and policy.weights is not None, (
+            "int posit weights require policy.weights")
+        y = kops.pw_matmul(x, w, policy.weights).astype(x.dtype)
+    else:
+        if policy is not None and policy.weights is not None:
+            w = posit_cast_ste(w, policy.weights)
+        y = jnp.einsum("...i,io->...o", x, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+def rope(x, positions, theta: float = 10000.0):
+    """x [..., S, D] with D even; positions [..., S] (int)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# blockwise (flash-style) attention in pure jnp
+# --------------------------------------------------------------------------
+_NEG = -1e30
+
+
+def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
+                        window: int | None = None, q_chunk: int = 512,
+                        kv_chunk: int = 512, softcap: float | None = None,
+                        kv_len=None, cfg_kv=None):
+    """GQA-aware flash-style attention, O(chunk^2) memory.
+
+    q [B,H,Sq,D]; k/v [B,KV,Skv,D] with H = KV*G — the group dim is kept
+    explicit (no jnp.repeat materialization).  k/v may be posit storage ints
+    (cfg_kv set): each KV chunk is decoded to f32 right before its matmul,
+    mirroring the Pallas kernel's fused dequant — HBM traffic stays at posit
+    width and no full-cache float copy ever exists.
+
+    q_offset: absolute position of q[0] (decode: cache length; may be traced).
+    kv_len: number of valid KV positions (dynamic; default Skv).
+    window: sliding-window size (local attention, recurrentgemma).
+    """
+    B, H, Sq, D = q.shape
+    KV = n_kv
+    G = H // KV
+    Skv = k.shape[2]
+    scale = D ** -0.5
+    if kv_len is None:
+        kv_len = Skv
+
+    if Sq == 1:
+        # decode fast path (flash-decoding layout): no scan — S-contraction
+        # einsums let GSPMD keep the KV cache fully sharded on its sequence
+        # dim; the only cross-device traffic is the softmax stats and the
+        # (B,H,1,D) output psum (§Perf iteration B2)
+        def _dec1(t):
+            if cfg_kv is not None:
+                from repro.core.decode import decode_to_f32
+                return decode_to_f32(t, cfg_kv)
+            return t.astype(jnp.float32)
+
+        from repro.distributed.sharding import shard_activation
+        kf, vf = _dec1(k), _dec1(v)
+        if G > 1:
+            kf = jnp.repeat(kf, G, axis=1)
+            vf = jnp.repeat(vf, G, axis=1)
+        # pin the flash-decoding layout: tiny q replicated over the TP axis,
+        # KV stays sequence-sharded -> only stats/output psums cross chips
+        kf = shard_activation(kf, "kv_seq")
+        vf = shard_activation(vf, "kv_seq")
+        q = shard_activation(q, "batch_only")
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = jnp.arange(Skv)
+        valid = kpos < kv_len
+        if window is not None:
+            valid = valid & (kpos > kv_len - 1 - window)
+        s = jnp.where(valid[None, None, None, :], s, _NEG)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        out = jnp.einsum("bhqk,bhkd->bhqd", p, vf,
+                         preferred_element_type=jnp.float32)
+        out = out / p.sum(axis=-1, keepdims=True)
+        return out.astype(q.dtype)
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    pq = (-Sq) % qc
+    pk = (-Skv) % kc
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v
+    nq, nk = (Sq + pq) // qc, (Skv + pk) // kc
+
+    kb = kp.reshape(B, KV, nk, kc, D).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(B, KV, nk, kc, D).transpose(2, 0, 1, 3, 4)
+    qb = qp.reshape(B, H, nq, qc, D).transpose(2, 0, 1, 3, 4)
+
+    def _dec(t):
+        if cfg_kv is not None:
+            from repro.core.decode import decode_to_f32
+            return decode_to_f32(t, cfg_kv)
+        return t.astype(jnp.float32)
+
+    def q_block(qi, q_tile):                     # q_tile [B,H,qc,D]
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_tile, v_tile = inputs          # [B,KV,kc,D] (posit/float)
+            # per-chunk decode + GQA head expansion: transient, chunk-sized —
+            # the q-side head sharding propagates through the einsum while
+            # the kv source stays narrow in HBM
+            k_tile = _dec(k_tile)
+            v_tile = _dec(v_tile)
+            if G > 1:
+                k_tile = jnp.repeat(k_tile, G, axis=1)
+                v_tile = jnp.repeat(v_tile, G, axis=1)
+            kpos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bhqd,bhkd->bhqk",
+                           q_tile.astype(jnp.float32), k_tile,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap is not None:
+                s = jnp.tanh(s / softcap) * softcap
+            valid = (kpos < kv_len)[None, :]
+            if causal:
+                valid = valid & (qpos[:, None] >= kpos[None, :])
+            if window is not None:
+                valid = valid & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(valid[None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, v_tile,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, qc), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, D), jnp.float32)
+        # remat each kv step: score/prob blocks are recomputed in the backward
+        # (flash-attention memory behaviour), never saved per block pair
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step,
+                           policy=jax.checkpoint_policies.nothing_saveable),
+            (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        return acc / jnp.where(l == 0, 1.0, l)[..., None]
+
+    # checkpoint per q-block: lax.map saves only block inputs; one block's
+    # kv-scan carry chain is live at a time in the backward
+    outs = jax.lax.map(
+        jax.checkpoint(lambda args: q_block(*args),
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        (jnp.arange(nq), qb))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq + pq, D)[:, :, :Sq]
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block
+# --------------------------------------------------------------------------
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d_model, n_heads * head_dim, qkv_bias),
+        "wk": init_linear(ks[1], d_model, n_kv * head_dim, qkv_bias),
+        "wv": init_linear(ks[2], d_model, n_kv * head_dim, qkv_bias),
+        "wo": init_linear(ks[3], n_heads * head_dim, d_model, False),
+    }
+
+
+def attention_block(x, p: Params, *, n_heads: int, n_kv: int, head_dim: int,
+                    positions, policy: PositPolicy, causal: bool = True,
+                    window: int | None = None, rope_theta: float = 10000.0,
+                    kv_cache=None, softcap: float | None = None):
+    """Returns (out, new_kv_cache).  kv_cache: dict(k, v, length) or None.
+
+    k/v cache tensors are [B, n_kv, S_max, head_dim]; posit-quantized when
+    policy.kv_cache is set (storage ints; decoded for compute here, fused in
+    the Pallas kernel on TPU).
+    """
+    B, S, _ = x.shape
+    q = linear(x, p["wq"], policy).reshape(B, S, n_heads, head_dim)
+    k = linear(x, p["wk"], policy).reshape(B, S, n_kv, head_dim)
+    v = linear(x, p["wv"], policy).reshape(B, S, n_kv, head_dim)
+
+    q = rope(q.transpose(0, 2, 1, 3), positions[:, None, :], rope_theta)
+    k = rope(k.transpose(0, 2, 1, 3), positions[:, None, :], rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    kv_len = None
+    cfg_kv = None
+    if kv_cache is not None:
+        from repro.serving.kv_cache import append_kv
+        q_offset = kv_cache["length"]               # traced scalar
+        new_cache = append_kv(kv_cache, k, v, policy.kv_cache)
+        # pass the raw (possibly posit-int) buffers: chunks decode in-scan
+        k, v = new_cache["k"], new_cache["v"]
+        kv_len = new_cache["length"]
+        cfg_kv = policy.kv_cache
+    else:
+        q_offset = k.shape[2] - S
+
+    out = blockwise_attention(q, k, v, n_kv=n_kv, causal=causal,
+                              q_offset=q_offset, window=window,
+                              softcap=softcap, kv_len=kv_len, cfg_kv=cfg_kv)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, n_heads * head_dim)
+    return linear(out, p["wo"], policy), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP (dense) block
+# --------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, act: str) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": init_linear(ks[0], d_model, d_ff),
+         "w_down": init_linear(ks[1], d_ff, d_model)}
+    if act in ("geglu", "swiglu"):
+        p["w_gate"] = init_linear(ks[2], d_model, d_ff)
+    return p
+
+
+def mlp_block(x, p: Params, *, act: str, policy: PositPolicy):
+    up = linear(x, p["w_up"], policy)
+    if act == "geglu":
+        h = jax.nn.gelu(linear(x, p["w_gate"], policy)) * up
+    elif act == "swiglu":
+        h = jax.nn.silu(linear(x, p["w_gate"], policy)) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    elif act == "relu":
+        h = jax.nn.relu(up)
+    else:
+        raise ValueError(act)
+    return linear(h, p["w_down"], policy)
+
+
+# --------------------------------------------------------------------------
+# embedding with posit storage option
+# --------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d_model),
+                                       dtype=jnp.float32) * (d_model ** -0.5)}
+
+
+def embed(tokens, p: Params, policy: PositPolicy):
+    t = p["table"]
+    if t.dtype in (jnp.int8, jnp.int16):
+        # Light-PPU use case [9]: posit storage of tables, decode after gather
+        from repro.core.decode import decode_to_f32
+        rows = jnp.take(t, tokens, axis=0)
+        return decode_to_f32(rows, policy.weights)
+    if policy is not None and policy.weights is not None:
+        t = posit_cast_ste(t, policy.weights)
+    return jnp.take(t, tokens, axis=0)
+
+
+def unembed(h, p: Params, policy: PositPolicy):
+    t = p["table"]
+    if t.dtype in (jnp.int8, jnp.int16):
+        from repro.core.decode import decode_to_f32
+        t = decode_to_f32(t, policy.weights)
+    elif policy is not None and policy.weights is not None:
+        t = posit_cast_ste(t, policy.weights)
+    return jnp.einsum("...d,vd->...v", h, t,
+                      preferred_element_type=jnp.float32)

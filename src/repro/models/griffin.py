@@ -1,0 +1,98 @@
+"""Griffin / RecurrentGemma blocks (arXiv:2402.19427): RG-LRU gated linear
+recurrence + temporal conv, interleaved 1:2 with local sliding-window
+attention.
+
+The RG-LRU recurrence is per-channel (diagonal), so it maps exactly onto
+jax.lax.associative_scan — O(log T) depth, O(T d) memory, no custom kernel
+needed (the TPU-native form of the paper's GPU linear-scan kernel).  The
+O(1) recurrent state + windowed attention is what lets recurrentgemma-9b
+run the long_500k decode shape.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import init_linear, linear
+from repro.quant.policy import PositPolicy
+
+Params = dict[str, Any]
+
+CONV_WIDTH = 4
+LRU_C = 8.0
+
+
+def init_rglru_block(key, d_model: int, d_rnn: int | None = None) -> Params:
+    d_rnn = d_rnn or d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": init_linear(ks[0], d_model, d_rnn),
+        "w_gate_branch": init_linear(ks[1], d_model, d_rnn),
+        "conv_w": jax.random.normal(ks[2], (CONV_WIDTH, d_rnn),
+                                    dtype=jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d_rnn,), jnp.float32),
+        "w_input_gate": init_linear(ks[3], d_rnn, d_rnn),
+        "w_rec_gate": init_linear(ks[4], d_rnn, d_rnn),
+        # Lambda init so a = sigmoid(lam)^c spreads over (0.9, 0.999)
+        "lam": jnp.linspace(2.0, 6.0, d_rnn).astype(jnp.float32),
+        "w_out": init_linear(ks[5], d_rnn, d_model),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x [B,S,d], w [K,d] depthwise causal conv.  state: last K-1 inputs."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    return out.astype(x.dtype), xp[:, -(K - 1):]
+
+
+def rglru(x, gates_in, p: Params, h0=None, policy=None):
+    """RG-LRU: h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t o x_t).
+
+    a_t = exp(c * log(sigmoid(lam)) * r_t), r_t = sigmoid(W_r g),
+    i_t = sigmoid(W_i g).  x, gates_in: [B,S,d].
+    """
+    r = jax.nn.sigmoid(linear(gates_in, p["w_rec_gate"], policy))
+    i = jax.nn.sigmoid(linear(gates_in, p["w_input_gate"], policy))
+    log_a = LRU_C * r.astype(jnp.float32) * jax.nn.log_sigmoid(p["lam"])
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if x.shape[1] == 1 and h0 is not None:     # decode fast path
+        h = a[:, 0] * h0 + b[:, 0]
+        return h[:, None].astype(x.dtype), h
+
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block(x, p: Params, *, policy: PositPolicy, state=None):
+    """Full recurrent block: (linear -> conv -> RG-LRU) * gelu(linear) -> out.
+
+    state: (h [B,d], conv_state [B,K-1,d]) or None.
+    Returns (out, new_state).
+    """
+    h0, conv_state = state if state is not None else (None, None)
+    branch = linear(x, p["w_x"], policy)
+    branch, new_conv = _causal_conv1d(branch, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    rec, h_last = rglru(branch, branch, p, h0, policy=policy)
+    gate = jax.nn.gelu(linear(x, p["w_gate_branch"], policy))
+    out = linear(rec * gate, p["w_out"], policy)
+    return out, (h_last, new_conv)

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts block: top-k routing with *grouped* capacity-based
+einsum dispatch (GShard style — all matmul traffic, shards cleanly with the
+expert dimension on the 'model' mesh axis and groups on the data axes).
+
+Tokens are split into groups of `group_size`; each group gets a per-expert
+capacity C = ceil(group_size * top_k * capacity_factor / E).  The dispatch
+one-hot is [G, Tg, E, C] — its footprint scales as T_local * Tg * k * f per
+device (bounded by the group size knob), unlike a global-capacity dispatch
+whose [T, E, C] explodes at 1M-token batches.  Overflow tokens within a
+group drop (standard GShard behaviour, tracked by the aux loss).
+
+Used by olmoe-1b-7b (64e top-8) and qwen3-moe-235b-a22b (128e top-8).
+Expert tables are the biggest posit-storage win (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import _dense_init
+from repro.quant.policy import PositPolicy, posit_cast_ste
+
+Params = dict[str, Any]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, act: str) -> Params:
+    ks = jax.random.split(key, 4)
+    glu = act in ("geglu", "swiglu")
+    p = {
+        "router": _dense_init(ks[0], (d_model, n_experts)),
+        "w_up": _dense_init(ks[1], (n_experts, d_model, d_ff)),
+        "w_down": _dense_init(ks[2], (n_experts, d_ff, d_model), d_ff ** -0.5),
+    }
+    if glu:
+        p["w_gate"] = _dense_init(ks[3], (n_experts, d_model, d_ff))
+    return p
+
+
+def _maybe_decode(w, policy: PositPolicy):
+    if w.dtype in (jnp.int8, jnp.int16):
+        from repro.core.decode import decode_to_f32
+        return decode_to_f32(w, policy.weights)
+    if policy is not None and policy.weights is not None:
+        return posit_cast_ste(w, policy.weights)
+    return w
+
+
+def moe_block(x, p: Params, *, n_experts: int, top_k: int, act: str,
+              policy: PositPolicy, capacity_factor: float = 1.25,
+              group_size: int = 128):
+    """x [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    gs = min(group_size, T)
+    G = T // gs
+    # require T % gs == 0 (shapes here are powers of two; enforced by configs)
+    xt = x.reshape(G, gs, d)
+
+    router = _maybe_decode(p["router"], policy)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # [G,Tg,k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(capacity_factor * gs * top_k / n_experts))
+
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)  # [G,Tg,k,E]
+    flat = onehot.reshape(G, gs * top_k, n_experts)
+    pos = jnp.cumsum(flat, axis=1) - 1                             # arrival order
+    pos = (pos * flat).sum(axis=-1).reshape(G, gs, top_k)
+    keep = pos < cap
+
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                             dtype=x.dtype)[..., :cap]             # [G,Tg,k,C]
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(x.dtype), slot_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot.astype(jnp.float32),
+                      slot_oh.astype(jnp.float32), gate_vals).astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xt)                    # [G,E,C,d]
+
+    w_up = _maybe_decode(p["w_up"], policy)
+    w_down = _maybe_decode(p["w_down"], policy)
+    w_gate = _maybe_decode(p["w_gate"], policy) if "w_gate" in p else None
+
+    up = jnp.einsum("gecd,edf->gecf", xe, w_up,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    if act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, w_gate,
+                                   preferred_element_type=jnp.float32)
+                        .astype(x.dtype)) * up
+    elif act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w_gate,
+                                   preferred_element_type=jnp.float32)
+                        .astype(x.dtype)) * up
+    else:
+        h = jax.nn.gelu(up)
+    ye = jnp.einsum("gecf,efd->gecd", h, w_down,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+
+    out = jnp.einsum("gtec,gecd->gtd", comb, ye).reshape(B, S, d)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    f = onehot.astype(jnp.float32).sum(axis=(0, 1, 2)) / (T * top_k)
+    pm = probs.mean(axis=(0, 1))
+    aux = n_experts * jnp.sum(f * pm)
+    return out, aux

@@ -1,0 +1,166 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free token mixing
+with data-dependent per-channel decay.
+
+TPU adaptation: the recurrence
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ,   y_t = r_t S_{t-1} + (r_t.(u o k_t)) v_t
+is evaluated in *chunks* (linear-attention chunked form).  Within a chunk the
+pairwise decay factors  D[t,s,d] = exp(L_{t-1,d} - L_{s,d})  (L = cumulative
+log-decay <= 0, differences only for s < t so every exponent is <= 0 —
+numerically safe) are materialized at (C, C, dk) with a small C; across
+chunks a (dk, dv) state is carried through lax.scan.  This trades the
+sequential T-step scan for T/C steps of MXU-friendly batched einsums and is
+the standard TPU-native form of gated linear recurrences.
+
+Decode (serving) uses the O(1) single-step recurrence — this is why rwkv6
+runs the long_500k shape that quadratic-attention archs skip.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import _dense_init, init_linear, linear, rms_norm
+from repro.quant.policy import PositPolicy
+
+Params = dict[str, Any]
+
+CHUNK = 16
+DECAY_LORA = 64
+
+
+def init_rwkv6(key, d_model: int, head_dim: int = 64) -> Params:
+    n_heads = d_model // head_dim
+    ks = jax.random.split(key, 10)
+    return {
+        "mix": jnp.full((5, d_model), 0.5, jnp.float32),     # r,k,v,w,g lerp
+        "wr": init_linear(ks[0], d_model, d_model),
+        "wk": init_linear(ks[1], d_model, d_model),
+        "wv": init_linear(ks[2], d_model, d_model),
+        "wg": init_linear(ks[3], d_model, d_model),
+        "w0": jnp.full((d_model,), -6.0, jnp.float32),       # base decay
+        "w_lora_a": _dense_init(ks[4], (d_model, DECAY_LORA)),
+        "w_lora_b": jnp.zeros((DECAY_LORA, d_model), jnp.float32),
+        "u": jnp.zeros((n_heads, head_dim), jnp.float32),    # bonus
+        "wo": init_linear(ks[5], d_model, d_model),
+        "ln_x": {"scale": jnp.ones((d_model,), jnp.float32)},
+    }
+
+
+def _token_shift(x):
+    """x[t] -> x[t-1] (zero for t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _wkv_chunk(S, inputs, *, head_dim):
+    """One chunk of the WKV recurrence.  S [B,H,dk,dv];
+    r,k,v [B,H,C,dh]; logw [B,H,C,dk] (<= 0); u [H,dk]."""
+    r, k, v, logw, u = inputs
+    L = jnp.cumsum(logw, axis=2)                       # L_t, inclusive
+    Lprev = L - logw                                   # L_{t-1} (zero at t=0)
+
+    # inter-chunk: y_t += (r_t o exp(L_{t-1})) S_in
+    y = jnp.einsum("bhtd,bhdv->bhtv", r * jnp.exp(Lprev), S)
+
+    # intra-chunk: D[t,s,d] = exp(L_{t-1,d} - L_{s,d}) for s < t
+    diff = Lprev[:, :, :, None, :] - L[:, :, None, :, :]
+    C = r.shape[2]
+    mask = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])[None, None, :, :, None]
+    D = jnp.where(mask, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    scores = jnp.einsum("bhtd,bhtsd,bhsd->bhts", r, D, k)
+    y = y + jnp.einsum("bhts,bhsv->bhtv", scores, v)
+
+    # bonus (current token): (r_t . (u o k_t)) v_t
+    su = jnp.einsum("bhtd,hd,bhtd->bht", r, u, k)
+    y = y + su[..., None] * v
+
+    # state update: S_out = diag(exp(L_C)) S + sum_s (k_s o exp(L_C - L_s))^T v_s
+    Lc = L[:, :, -1:, :]                               # [B,H,1,dk]
+    S_new = jnp.exp(Lc[:, :, 0, :, None]) * S + jnp.einsum(
+        "bhsd,bhsv->bhdv", k * jnp.exp(Lc - L), v)
+    return S_new, y
+
+
+def rwkv6_time_mix(x, p: Params, *, head_dim: int, policy: PositPolicy,
+                   state=None, chunk: int = CHUNK):
+    """x [B,S,d] -> (y [B,S,d], new_state).  state: [B,H,dk,dv] + shift [B,d]."""
+    B, S, d = x.shape
+    H = d // head_dim
+
+    if state is None:
+        x_prev = _token_shift(x)
+        S0 = jnp.zeros((B, H, head_dim, head_dim), x.dtype)
+    else:
+        S0, last_x = state
+        x_prev = jnp.concatenate([last_x[:, None], x[:, :-1]], axis=1)
+
+    mix = p["mix"]
+    xr, xk, xv, xw, xg = (x + (x_prev - x) * mix[i] for i in range(5))
+
+    r = linear(xr, p["wr"], policy).reshape(B, S, H, head_dim).transpose(0, 2, 1, 3)
+    k = linear(xk, p["wk"], policy).reshape(B, S, H, head_dim).transpose(0, 2, 1, 3)
+    v = linear(xv, p["wv"], policy).reshape(B, S, H, head_dim).transpose(0, 2, 1, 3)
+    g = linear(xg, p["wg"], policy)
+
+    # data-dependent decay (the Finch contribution): w = exp(-exp(w0 + lora))
+    ww = p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    logw = -jnp.exp(jnp.clip(ww, -20.0, 10.0).astype(jnp.float32))
+    logw = logw.reshape(B, S, H, head_dim).transpose(0, 2, 1, 3)
+
+    # pad to chunk multiple
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r_, k_, v_ = zf(r), zf(k), zf(v)
+        logw_ = jnp.pad(logw, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        r_, k_, v_, logw_ = r, k, v, logw
+    nC = (S + pad) // chunk
+
+    def body(Scur, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 2)
+        S_new, y = _wkv_chunk(
+            Scur, (sl(r_).astype(jnp.float32), sl(k_).astype(jnp.float32),
+                   sl(v_).astype(jnp.float32), sl(logw_), p["u"]),
+            head_dim=head_dim)
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(jax.checkpoint(body), S0.astype(jnp.float32),
+                             jnp.arange(nC))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, nC * chunk, head_dim)[:, :, :S]
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d).astype(x.dtype)
+
+    # per-head group norm + silu(g) gate, output projection
+    y = y.reshape(B, S, H, head_dim)
+    mu = y.mean(axis=-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, d)
+    y = y * p["ln_x"]["scale"]
+    y = y * jax.nn.silu(g)
+    out = linear(y, p["wo"], policy)
+    new_state = (S_fin.astype(x.dtype), x[:, -1])
+    return out, new_state
+
+
+def init_rwkv6_channel_mix(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "mix": jnp.full((2, d_model), 0.5, jnp.float32),
+        "wk": init_linear(ks[0], d_model, d_ff),
+        "wr": init_linear(ks[1], d_model, d_model),
+        "wv": init_linear(ks[2], d_ff, d_model),
+    }
+
+
+def rwkv6_channel_mix(x, p: Params, *, policy: PositPolicy, last_x=None):
+    B, S, d = x.shape
+    if last_x is None:
+        x_prev = _token_shift(x)
+    else:
+        x_prev = jnp.concatenate([last_x[:, None], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["mix"][0]
+    xr = x + (x_prev - x) * p["mix"][1]
+    k = jnp.square(jax.nn.relu(linear(xk, p["wk"], policy)))
+    return jax.nn.sigmoid(linear(xr, p["wr"], policy)) * linear(
+        k, p["wv"], policy), x[:, -1]

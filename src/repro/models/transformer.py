@@ -1,0 +1,377 @@
+"""Model assembly: decoder LMs, encoder-only stacks, MoE, SSM and hybrid
+patterns — one config-driven implementation covering all ten assigned
+architectures (DESIGN.md §4).
+
+Layers are grouped by the repeating `block_pattern` and scanned
+(jax.lax.scan over stacked parameters) so even the 94-layer MoE lowers to a
+compact HLO; each scanned step is rematerialized (configurable policy).
+Posit enters through cfg.policy (see quant/policy.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import griffin as GR
+from repro.models import moe as MOE
+from repro.models import rwkv6 as RW
+from repro.quant.policy import NONE, PositPolicy
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 128      # dispatch group (see models/moe.py)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    act: str = "swiglu"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"
+    encoder_only: bool = False
+    block_pattern: tuple[str, ...] = ("attn",)
+    window: int | None = None         # for "attn_local"
+    moe: MoEConfig | None = None
+    tie_embeddings: bool = True
+    embed_scale: bool = False         # gemma: x *= sqrt(d_model)
+    input_mode: str = "tokens"        # tokens | embeddings | tokens+image
+    dtype: str = "float32"
+    policy: PositPolicy = NONE
+    remat: bool = True
+    scan_layers: bool = True          # False: unrolled (cost-probe mode)
+    rwkv_head_dim: int = 64
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern_reps(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def pattern_rem(self) -> int:
+        return self.n_layers % len(self.block_pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        per_layer = {}
+        glu = 3 if self.act in ("geglu", "swiglu") else 2
+        attn = d * self.hd * (self.n_heads + 2 * self.n_kv) + self.n_heads * self.hd * d
+        if self.moe:
+            mlp = d * self.moe.n_experts + self.moe.n_experts * glu * d * ff
+        else:
+            mlp = glu * d * ff
+        per_layer["attn"] = attn + mlp
+        per_layer["attn_local"] = attn + mlp
+        per_layer["rwkv6"] = 6 * d * d + 2 * d * ff + d * RW.DECAY_LORA * 2
+        per_layer["rglru"] = 5 * d * d + mlp
+        total = 0
+        for i in range(self.n_layers):
+            total += per_layer[self.block_pattern[i % len(self.block_pattern)]]
+        total += v * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        glu = 3 if self.act in ("geglu", "swiglu") else 2
+        dense = self.param_count()
+        moe_all = self.n_layers * self.moe.n_experts * glu * d * ff
+        moe_active = self.n_layers * self.moe.top_k * glu * d * ff
+        return dense - moe_all + moe_active
+
+
+# --------------------------------------------------------------------------
+# per-block init/apply
+# --------------------------------------------------------------------------
+def _init_block(key, kind: str, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    norm_init = (B.init_rmsnorm if cfg.norm == "rmsnorm"
+                 else B.init_layernorm)
+    if kind in ("attn", "attn_local"):
+        p = {"ln1": norm_init(cfg.d_model), "ln2": norm_init(cfg.d_model),
+             "attn": B.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv, cfg.hd, cfg.qkv_bias)}
+        if cfg.moe:
+            p["moe"] = MOE.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                    cfg.moe.n_experts, cfg.act)
+        else:
+            p["mlp"] = B.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+        return p
+    if kind == "rwkv6":
+        return {"ln1": norm_init(cfg.d_model), "ln2": norm_init(cfg.d_model),
+                "tmix": RW.init_rwkv6(ks[0], cfg.d_model, cfg.rwkv_head_dim),
+                "cmix": RW.init_rwkv6_channel_mix(ks[1], cfg.d_model, cfg.d_ff)}
+    if kind == "rglru":
+        p = {"ln1": norm_init(cfg.d_model), "ln2": norm_init(cfg.d_model),
+             "rec": GR.init_rglru_block(ks[0], cfg.d_model)}
+        if cfg.moe:
+            p["moe"] = MOE.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                    cfg.moe.n_experts, cfg.act)
+        else:
+            p["mlp"] = B.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+        return p
+    raise ValueError(kind)
+
+
+def _norm(x, p, cfg: ModelConfig):
+    from repro.distributed.sharding import shard_activation
+    h = (B.rms_norm(x, p) if cfg.norm == "rmsnorm"
+         else B.layer_norm(x, p))
+    # Megatron-SP: blocks consume sequence-gathered activations (no-op
+    # outside a mesh context / under fsdp) — §Perf iteration A4
+    return shard_activation(h, "block_in")
+
+
+def _apply_block(x, p: Params, kind: str, cfg: ModelConfig, positions,
+                 cache, aux):
+    pol = cfg.policy
+    if kind in ("attn", "attn_local"):
+        h, new_cache = B.attention_block(
+            _norm(x, p["ln1"], cfg), p["attn"], n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv, head_dim=cfg.hd, positions=positions, policy=pol,
+            causal=not cfg.encoder_only,
+            window=cfg.window if kind == "attn_local" else None,
+            rope_theta=cfg.rope_theta, kv_cache=cache)
+        x = x + h.astype(x.dtype)
+        if cfg.moe:
+            h, a = MOE.moe_block(_norm(x, p["ln2"], cfg), p["moe"],
+                                 n_experts=cfg.moe.n_experts,
+                                 top_k=cfg.moe.top_k, act=cfg.act, policy=pol,
+                                 capacity_factor=cfg.moe.capacity_factor,
+                                 group_size=cfg.moe.group_size)
+            aux = aux + a
+        else:
+            h = B.mlp_block(_norm(x, p["ln2"], cfg), p["mlp"], act=cfg.act,
+                            policy=pol)
+        return x + h.astype(x.dtype), new_cache, aux
+    if kind == "rwkv6":
+        tstate, cstate = (cache if cache is not None else (None, None))
+        h, new_t = RW.rwkv6_time_mix(_norm(x, p["ln1"], cfg), p["tmix"],
+                                     head_dim=cfg.rwkv_head_dim, policy=pol,
+                                     state=tstate)
+        x = x + h.astype(x.dtype)
+        h, new_c = RW.rwkv6_channel_mix(_norm(x, p["ln2"], cfg), p["cmix"],
+                                        policy=pol, last_x=cstate)
+        return x + h.astype(x.dtype), (new_t, new_c), aux
+    if kind == "rglru":
+        h, new_state = GR.rglru_block(_norm(x, p["ln1"], cfg), p["rec"],
+                                      policy=pol, state=cache)
+        x = x + h.astype(x.dtype)
+        if cfg.moe:
+            h, a = MOE.moe_block(_norm(x, p["ln2"], cfg), p["moe"],
+                                 n_experts=cfg.moe.n_experts,
+                                 top_k=cfg.moe.top_k, act=cfg.act, policy=pol,
+                                 capacity_factor=cfg.moe.capacity_factor,
+                                 group_size=cfg.moe.group_size)
+            aux = aux + a
+        else:
+            h = B.mlp_block(_norm(x, p["ln2"], cfg), p["mlp"], act=cfg.act,
+                            policy=pol)
+        return x + h.astype(x.dtype), new_state, aux
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# cache pytrees
+# --------------------------------------------------------------------------
+def init_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.float32):
+    from repro.serving.kv_cache import init_cache
+    if kind == "attn":
+        return init_cache(batch, cfg.n_kv, max_len, cfg.hd,
+                          cfg.policy.kv_cache, dtype)
+    if kind == "attn_local":
+        # full-length buffer; a window-sized ring buffer is a §Perf memory
+        # optimization applied in the hillclimb (EXPERIMENTS.md)
+        return init_cache(batch, cfg.n_kv, max_len, cfg.hd,
+                          cfg.policy.kv_cache, dtype)
+    if kind == "rwkv6":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        t = (jnp.zeros((batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), dtype),
+             jnp.zeros((batch, cfg.d_model), dtype))
+        c = jnp.zeros((batch, cfg.d_model), dtype)
+        return (t, c)
+    if kind == "rglru":
+        return (jnp.zeros((batch, cfg.d_model), jnp.float32),
+                jnp.zeros((batch, GR.CONV_WIDTH - 1, cfg.d_model), dtype))
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    """Stacked caches: {kind_position: stacked over reps} + remainder list."""
+    P = len(cfg.block_pattern)
+    reps = cfg.pattern_reps
+
+    def stack(kind):
+        one = init_layer_cache(kind, cfg, batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one)
+
+    scanned = tuple(stack(k) for k in cfg.block_pattern) if reps else ()
+    rem = tuple(init_layer_cache(cfg.block_pattern[i], cfg, batch, max_len,
+                                 dtype)
+                for i in range(cfg.pattern_rem))
+    return {"scanned": scanned, "rem": rem}
+
+
+# --------------------------------------------------------------------------
+# model init / forward
+# --------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig) -> Params:
+    P = len(cfg.block_pattern)
+    reps, rem = cfg.pattern_reps, cfg.pattern_rem
+    keys = jax.random.split(key, reps * P + rem + 2)
+
+    def stacked(pos):
+        kind = cfg.block_pattern[pos]
+        per_rep = [
+            _init_block(keys[r * P + pos], kind, cfg) for r in range(reps)
+        ]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_rep)
+
+    params: Params = {
+        "embed": B.init_embedding(keys[-1], cfg.vocab, cfg.d_model),
+        "ln_f": (B.init_rmsnorm(cfg.d_model) if cfg.norm == "rmsnorm"
+                 else B.init_layernorm(cfg.d_model)),
+        "scanned": tuple(stacked(i) for i in range(P)) if reps else (),
+        "rem": tuple(
+            _init_block(keys[reps * P + i], cfg.block_pattern[i], cfg)
+            for i in range(rem)),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = B.init_linear(keys[-2], cfg.d_model, cfg.vocab)
+    return params
+
+
+def forward(params: Params, cfg: ModelConfig, *, tokens=None,
+            inputs_embeds=None, positions=None, caches=None,
+            return_hidden: bool = False):
+    """Returns (logits [B,S,vocab], aux_loss, new_caches).
+
+    tokens [B,S] int32 and/or inputs_embeds [B,Se,d] depending on
+    cfg.input_mode.  positions [B,S] absolute positions (default arange,
+    offset by cache length when serving).
+    return_hidden: skip the unembedding and return the final normalized
+    hidden states instead of logits (the chunked-loss training path —
+    §Perf iteration A3 — computes the LM head per sequence chunk).
+    """
+    pol = cfg.policy
+    if cfg.input_mode == "embeddings":
+        x = inputs_embeds
+    elif cfg.input_mode == "tokens+image" and inputs_embeds is not None:
+        t = B.embed(tokens, params["embed"], pol)
+        x = jnp.concatenate([inputs_embeds.astype(t.dtype), t], axis=1)
+    else:
+        x = B.embed(tokens, params["embed"], pol)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = x.astype(jnp.dtype(cfg.dtype))
+    from repro.distributed.sharding import shard_activation
+    x = shard_activation(x, "act")
+
+    Bsz, S, _ = x.shape
+    if positions is None:
+        off = 0
+        if caches is not None:
+            off = _cache_length(caches, cfg)
+        positions = off + jnp.broadcast_to(jnp.arange(S), (Bsz, S))
+
+    aux = jnp.zeros((), jnp.float32)
+    P = len(cfg.block_pattern)
+    reps = cfg.pattern_reps
+
+    serving = caches is not None
+    scanned_caches = caches["scanned"] if serving else tuple(None for _ in range(P))
+    rem_caches = caches["rem"] if serving else tuple(
+        None for _ in range(cfg.pattern_rem))
+
+    def superblock(carry, inputs):
+        x, aux = carry
+        layer_params = inputs[0]
+        layer_caches = inputs[1]
+        new_caches = []
+        for pos in range(P):
+            kind = cfg.block_pattern[pos]
+            cache = layer_caches[pos] if serving else None
+            x, nc, aux = _apply_block(x, layer_params[pos], kind, cfg,
+                                      positions, cache, aux)
+            new_caches.append(nc)
+        return (x, aux), tuple(new_caches)
+
+    new_scanned = ()
+    if reps:
+        fn = jax.checkpoint(superblock,
+                            policy=jax.checkpoint_policies.nothing_saveable) \
+            if cfg.remat else superblock
+        xs_caches = (scanned_caches if serving
+                     else tuple(jnp.zeros((reps,)) for _ in range(P)))
+        if cfg.scan_layers:
+            (x, aux), new_scanned = jax.lax.scan(
+                fn, (x, aux), (params["scanned"], xs_caches))
+        else:
+            # unrolled python loop: identical math, per-layer ops visible to
+            # cost_analysis (the dry-run's trip-count-correct probe mode)
+            carry = (x, aux)
+            ys = []
+            for r in range(reps):
+                sl = jax.tree_util.tree_map(lambda t: t[r],
+                                            (params["scanned"], xs_caches))
+                carry, nc = fn(carry, sl)
+                ys.append(nc)
+            x, aux = carry
+            if serving:
+                new_scanned = jax.tree_util.tree_map(
+                    lambda *z: jnp.stack(z), *ys)
+
+    new_rem = []
+    for i in range(cfg.pattern_rem):
+        kind = cfg.block_pattern[i]
+        x, nc, aux = _apply_block(x, params["rem"][i], kind, cfg, positions,
+                                  rem_caches[i] if serving else None, aux)
+        new_rem.append(nc)
+
+    x = _norm(x, params["ln_f"], cfg)
+    new_caches = ({"scanned": new_scanned, "rem": tuple(new_rem)}
+                  if serving else None)
+    if return_hidden:
+        return x, aux, new_caches
+    if cfg.tie_embeddings:
+        logits = B.unembed(x, params["embed"], pol)
+    else:
+        logits = B.linear(x, params["unembed"], pol).astype(jnp.float32)
+    logits = shard_activation(logits, "logits")
+    return logits, aux, new_caches
+
+
+def _cache_length(caches, cfg: ModelConfig):
+    """Current sequence offset from the first attention cache (if any)."""
+    for group in (caches["scanned"], caches["rem"]):
+        for c in group:
+            if isinstance(c, dict) and "length" in c:
+                ln = c["length"]
+                return ln[0] if ln.ndim else ln
+    return 0

@@ -1,0 +1,100 @@
+"""Posit dtype policy — the paper's formats as first-class tensor formats.
+
+The FPPU gives a core "real number processing capabilities" through an
+integer register file (§VI-VII); the LM-framework analogue is a policy that
+decides which tensors live as posit payload ints:
+
+  * weights:      linear/embedding tables stored posit8/16; decoded on use
+                  (forward), straight-through estimator for gradients (QAT),
+                  or plain post-training quantization for serving.
+  * kv_cache:     serving KV stored posit; decoded inside the attention
+                  kernel (kernels/flash_attention.py).
+  * grads:        wire format of the cross-pod gradient collective
+                  (distributed/collectives.py).
+
+`PositPolicy(None, ...)` fields disable posit for that tensor class, so the
+same model code runs pure-f32/bf16 (the paper's binary32 baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.convert import f32_to_posit
+from repro.core.decode import decode_to_f32
+from repro.core.types import PositConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PositPolicy:
+    weights: PositConfig | None = None     # linear/embedding storage format
+    kv_cache: PositConfig | None = None    # serving KV-cache format
+    grads: PositConfig | None = None       # gradient-collective wire format
+    activations: PositConfig | None = None # inter-block activation format
+
+    @property
+    def enabled(self) -> bool:
+        return any((self.weights, self.kv_cache, self.grads, self.activations))
+
+
+NONE = PositPolicy()
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def posit_cast_ste(w: jnp.ndarray, cfg: PositConfig) -> jnp.ndarray:
+    """f32 -> posit -> f32 round-trip with straight-through gradient.
+
+    Forward sees exactly the values the posit weights will hold (quantization
+    -aware); backward passes gradients unchanged (the standard STE used for
+    low-bit formats).
+    """
+    orig = w.dtype
+    return decode_to_f32(f32_to_posit(w.astype(jnp.float32), cfg),
+                         cfg).astype(orig)
+
+
+def _ste_fwd(w, cfg):
+    return posit_cast_ste(w, cfg), None
+
+
+def _ste_bwd(cfg, res, g):
+    return (g,)
+
+
+posit_cast_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def quantize_tree(params, cfg: PositConfig, predicate=None):
+    """Post-training quantization: f32 param pytree -> posit storage ints.
+
+    predicate(path_str, leaf) -> bool selects which leaves quantize
+    (default: every float array with >= 2 dims — matrices/tables, not
+    norm scales or biases, matching the paper's DNN experiments which keep
+    normalization in high precision).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves, treedef = flat
+
+    def default_pred(path, x):
+        return (hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+                and x.ndim >= 2)
+
+    pred = predicate or default_pred
+    out = []
+    for path, leaf in leaves:
+        p = jax.tree_util.keystr(path)
+        out.append(f32_to_posit(leaf.astype(jnp.float32), cfg)
+                   if pred(p, leaf) else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def dequantize_tree(params, cfg: PositConfig):
+    """Inverse of quantize_tree (int leaves -> f32)."""
+    def deq(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.integer):
+            return decode_to_f32(x, cfg)
+        return x
+    return jax.tree_util.tree_map(deq, params)

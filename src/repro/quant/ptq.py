@@ -1,0 +1,59 @@
+"""Post-training quantization to posit storage (serving deployment).
+
+Quantizes exactly the leaves the runtime knows how to decode (linear weight
+matrices, embedding/expert tables); keeps norms, biases, convs, LoRA and
+router weights in f32 (matching the paper's DNN experiments, which keep
+normalization wide).  The predicate mirrors distributed/sharding rules.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.convert import f32_to_posit
+from repro.core.types import PositConfig
+
+_QUANT_PATTERNS = [
+    r"embed/table$",
+    r"unembed/w$",
+    r"moe/w_(up|gate|down)$",
+    r"(wq|wk|wv|wg|wo|wr|w_up|w_gate|w_down|w_x|w_gate_branch|"
+    r"w_input_gate|w_rec_gate|w_out)/w$",
+]
+_QUANT_RE = [re.compile(p) for p in _QUANT_PATTERNS]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def is_quantizable(path_str: str) -> bool:
+    return any(p.search(path_str) for p in _QUANT_RE)
+
+
+def quantize_for_serving(params, cfg: PositConfig):
+    """f32 param pytree -> posit storage ints on the quantizable leaves."""
+    def q(path, leaf):
+        if (is_quantizable(_path_str(path))
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            return f32_to_posit(leaf.astype(jnp.float32), cfg)
+        return leaf
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def serving_param_specs(param_shapes, cfg: PositConfig):
+    """ShapeDtypeStruct tree -> same tree with posit int dtypes on
+    quantizable leaves (for AOT lowering without materializing weights)."""
+    dt = jnp.dtype(f"int{cfg.storage_bits}")
+
+    def q(path, leaf):
+        if (is_quantizable(_path_str(path))
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            return jax.ShapeDtypeStruct(leaf.shape, dt)
+        return leaf
+    return jax.tree_util.tree_map_with_path(q, param_shapes)

@@ -1,0 +1,52 @@
+"""Batched serving engine: prefill + decode with (optionally posit) KV cache.
+
+Greedy/temperature sampling over a synchronized batch — the serve_step the
+dry-run lowers for decode_32k / long_500k is `decode_step` below.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, forward, init_caches
+
+
+def prefill_step(params, cfg: ModelConfig, tokens, caches):
+    logits, _, caches = forward(params, cfg, tokens=tokens, caches=caches)
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches):
+    """token [B, 1] -> (next-token logits [B, vocab], new caches)."""
+    logits, _, caches = forward(params, cfg, tokens=token, caches=caches)
+    return logits[:, -1], caches
+
+
+def sample(logits, key, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, max_new: int,
+             max_len: int | None = None, temperature: float = 0.0,
+             seed: int = 0):
+    """prompts [B, S] int32 -> generated [B, max_new] int32 (batched)."""
+    B, S = prompts.shape
+    max_len = max_len or (S + max_new)
+    caches = init_caches(cfg, B, max_len, dtype=jnp.dtype(cfg.dtype))
+
+    pf = jax.jit(lambda p, t, c: prefill_step(p, cfg, t, c))
+    dc = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+
+    logits, caches = pf(params, prompts, caches)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    tok = sample(logits, key, temperature)[:, None].astype(jnp.int32)
+    out.append(tok)
+    for i in range(max_new - 1):
+        key, sub = jax.random.split(key)
+        logits, caches = dc(params, tok, caches)
+        tok = sample(logits, sub, temperature)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,81 @@
+"""KV cache with optional posit storage (the serving-side posit win).
+
+Decode is HBM-bound on KV reads; posit16 halves and posit8 quarters those
+bytes vs f32 (paper C4 applied to serving).  The cache stores posit payload
+ints; decode happens at attention time (fused into the Pallas kernel on TPU,
+explicit decode on the jnp path — either way HBM sees only narrow ints).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.convert import f32_to_posit
+from repro.core.decode import decode_to_f32
+from repro.core.types import PositConfig
+
+
+def init_cache(batch: int, n_kv: int, max_len: int, head_dim: int,
+               cfg: PositConfig | None, dtype=jnp.float32):
+    if cfg is not None:
+        buf_dtype = jnp.dtype(f"int{cfg.storage_bits}")
+    else:
+        buf_dtype = dtype
+    shape = (batch, n_kv, max_len, head_dim)
+    return {
+        "k": jnp.zeros(shape, buf_dtype),
+        "v": jnp.zeros(shape, buf_dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def append_kv(cache, k, v, cfg: PositConfig | None):
+    """k, v: [B, n_kv, S, head_dim] float.  Writes at cache['length'].
+
+    Decode-sized appends (S_new << S_max) use a masked elementwise write
+    instead of dynamic_update_slice: a DUS at a *traced* index on a sharded
+    sequence dim makes GSPMD gather the whole buffer (involuntary
+    rematerialization); where()+iota stays fully sharded.  Prefill-sized
+    appends start at 0 with a static extent, where DUS is sharding-safe.
+    """
+    if cfg is not None:
+        k = f32_to_posit(k.astype(jnp.float32), cfg)
+        v = f32_to_posit(v.astype(jnp.float32), cfg)
+    else:
+        k = k.astype(cache["k"].dtype)
+        v = v.astype(cache["v"].dtype)
+    start = cache["length"]
+    s_new, s_max = k.shape[2], cache["k"].shape[2]
+
+    if s_new * 4 >= s_max:
+        # prefill: static start (the cache is empty; length is 0 by
+        # construction of the serving engine)
+        new_k = lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        new_v = lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+    else:
+        pos = jnp.arange(s_max)
+        mask = (pos >= start) & (pos < start + s_new)
+        if s_new == 1:
+            # single-token decode: broadcast + where, purely elementwise
+            def write(buf, new):
+                return jnp.where(mask[None, None, :, None],
+                                 jnp.broadcast_to(new[:, :, 0:1], buf.shape),
+                                 buf)
+        else:
+            idx = jnp.clip(pos - start, 0, s_new - 1)
+            def write(buf, new):
+                cand = jnp.take(new, idx, axis=2)
+                return jnp.where(mask[None, None, :, None], cand, buf)
+        new_k = write(cache["k"], k)
+        new_v = write(cache["v"], v)
+    return {"k": new_k, "v": new_v, "length": start + s_new}
+
+
+def materialize_kv(cache, cfg: PositConfig | None, dtype=jnp.float32):
+    """Full-buffer k, v as float (positions >= length are masked by the
+    attention's kv_len argument)."""
+    k, v = cache["k"], cache["v"]
+    if cfg is not None:
+        k = decode_to_f32(k, cfg).astype(dtype)
+        v = decode_to_f32(v, cfg).astype(dtype)
+    return k, v

@@ -1,0 +1,64 @@
+"""Training loop with checkpoint/restart fault tolerance.
+
+Single-host CPU runs drive the examples and tests; launch/train.py wraps the
+same loop in a mesh with sharded params (the pjit path the dry-run proves).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.data.pipeline import DataConfig, global_batch_at
+from repro.distributed.fault_tolerance import RestartPolicy, StepWatchdog
+from repro.models.transformer import ModelConfig, init_params
+from repro.optim import adamw
+from repro.training.train_step import train_step
+
+
+def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+               data_cfg: DataConfig, num_steps: int,
+               ckpt_dir: str | None = None,
+               policy: RestartPolicy = RestartPolicy(),
+               log_every: int = 10, seed: int = 0, verbose: bool = True):
+    """Runs (or resumes) training; returns the metrics history."""
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw.init_state(params, opt_cfg)
+    start_step = 0
+
+    if ckpt_dir:
+        step, restored = store.restore_latest(
+            ckpt_dir, {"params": params, "opt": opt_state})
+        if step is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = step
+            if verbose:
+                print(f"[trainer] resumed from step {step}")
+
+    step_fn = jax.jit(
+        lambda p, o, b: train_step(p, o, b, cfg, opt_cfg))
+
+    history = []
+    t0 = time.time()
+    for step in range(start_step, num_steps):
+        batch = global_batch_at(step, data_cfg)
+        with StepWatchdog(policy.step_timeout_s):
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            if verbose:
+                print(f"[trainer] step {step:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}")
+        if ckpt_dir and (step + 1) % policy.ckpt_every == 0:
+            store.save(ckpt_dir, step + 1,
+                       {"params": params, "opt": opt_state},
+                       keep=policy.keep)
+    if ckpt_dir:
+        store.save(ckpt_dir, num_steps, {"params": params, "opt": opt_state},
+                   keep=policy.keep)
+    return params, opt_state, history

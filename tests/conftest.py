@@ -1,0 +1,13 @@
+import os
+import sys
+
+# tests run single-device (the 512-device flag is dryrun.py-only by design)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,129 @@
+"""Pallas kernel sweeps (interpret=True) vs the ref.py pure-jnp oracles.
+
+Integer-domain kernels must be bit-exact; f32-accumulating kernels compare
+with accumulation-order tolerance.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.convert import f32_to_posit
+from repro.core.types import P8_0, P8_2, P16_1, P16_2
+from repro.kernels import flash_attention as KF
+from repro.kernels import posit_codec as KC
+from repro.kernels import posit_elementwise as KE
+from repro.kernels import posit_gemm as KG
+from repro.kernels import ref as R
+
+CFGS = [(P8_2, jnp.int8), (P16_2, jnp.int16), (P8_0, jnp.int8),
+        (P16_1, jnp.int16)]
+
+
+def _rand_posit(rng, shape, cfg, dt):
+    x = rng.integers(-(1 << (cfg.n - 1)) + 1, 1 << (cfg.n - 1), shape)
+    return jnp.asarray(x, dt)
+
+
+@pytest.mark.parametrize("cfg,dt", CFGS[:2], ids=lambda c: str(c))
+@pytest.mark.parametrize("shape", [(32, 48, 56), (96, 160, 200), (8, 512, 128)])
+def test_gemm_vs_ref(rng, cfg, dt, shape):
+    m, k, n = shape
+    a = _rand_posit(rng, (m, k), cfg, dt)
+    b = _rand_posit(rng, (k, n), cfg, dt)
+    got = KG.posit_gemm(a, b, cfg_a=cfg, cfg_b=cfg, bm=32, bn=64, bk=64,
+                        interpret=True)
+    want = R.posit_gemm_ref(a, b, cfg_a=cfg, cfg_b=cfg)
+    # random posit<.,2> operands span ~useed^(n-2) of dynamic range, so the
+    # k-tiled accumulation order shifts cancellation-heavy entries: compare
+    # against the magnitude scale of the accumulator, not elementwise rtol
+    scale = float(jnp.abs(want).max())
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-6 * scale)
+    # posit-rounded output: the single final rounding must match exactly
+    gotp = KG.posit_gemm(a, b, cfg_a=cfg, cfg_b=cfg, cfg_out=cfg,
+                         out_posit=True, bm=32, bn=64, bk=64, interpret=True)
+    wantp = R.posit_gemm_ref(a, b, cfg_a=cfg, cfg_b=cfg, cfg_out=cfg,
+                             out_posit=True)
+    mism = int((gotp != wantp).sum())
+    # f32 accumulation order may flip the last posit ulp on a tiny fraction
+    assert mism <= gotp.size * 0.002, mism
+
+
+@pytest.mark.parametrize("cfg,dt", CFGS[:2], ids=lambda c: str(c))
+def test_pw_gemm_float_activation(rng, cfg, dt):
+    x = jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)
+    w = f32_to_posit(jnp.asarray(rng.normal(size=(96, 128)), jnp.float32), cfg)
+    got = KG.pw_gemm(x, w, cfg, bm=32, bn=64, bk=32, interpret=True)
+    want = R.posit_gemm_ref(x, w, cfg_a=None, cfg_b=cfg)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg,dt", CFGS, ids=lambda c: str(c))
+@pytest.mark.parametrize("op", ["add", "sub", "mul", "fma"])
+def test_elementwise_bit_exact(rng, cfg, dt, op):
+    shape = (37, 211)
+    n_in = 3 if op == "fma" else 2
+    args = tuple(_rand_posit(rng, shape, cfg, dt) for _ in range(n_in))
+    got = KE.elementwise(op, *args, cfg=cfg, block_rows=8, interpret=True)
+    want = R.elementwise_ref(op, *args, cfg=cfg)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("cfg,dt", CFGS, ids=lambda c: str(c))
+@pytest.mark.parametrize("mode", ["exact", "poly", "poly_corrected", "pacogen"])
+def test_divide_kernel_bit_exact_vs_ref(rng, cfg, dt, mode):
+    a = _rand_posit(rng, (23, 129), cfg, dt)
+    b = _rand_posit(rng, (23, 129), cfg, dt)
+    got = KE.divide(a, b, cfg=cfg, mode=mode, block_rows=8, interpret=True)
+    want = R.divide_ref(a, b, cfg=cfg, mode=mode)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("cfg,dt", CFGS, ids=lambda c: str(c))
+def test_codec_roundtrip(rng, cfg, dt):
+    v = jnp.asarray(rng.normal(size=(33, 77)), jnp.float32)
+    p = KC.encode_block(v, cfg, block_rows=8, interpret=True)
+    assert (p == R.encode_ref(v, cfg)).all()
+    d = KC.decode_block(p, cfg, block_rows=8, interpret=True)
+    assert (d == R.decode_ref(p, cfg)).all()
+    # re-encode is idempotent
+    assert (KC.encode_block(d, cfg, block_rows=8, interpret=True) == p).all()
+
+
+@pytest.mark.parametrize("cfg_kv", [None, P16_2, P8_2],
+                         ids=["f32kv", "p16kv", "p8kv"])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(rng, cfg_kv, causal):
+    BH, SQ, SKV, D = 4, 48, 160, 64
+    q = jnp.asarray(rng.normal(size=(BH, SQ, D)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(BH, SKV, D)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(BH, SKV, D)), jnp.float32)
+    if cfg_kv is not None:
+        kf = f32_to_posit(kf, cfg_kv)
+        vf = f32_to_posit(vf, cfg_kv)
+    got = KF.flash_attention(q, kf, vf, cfg_kv=cfg_kv, causal=causal,
+                             bq=16, bk=64, interpret=True)
+    want = R.flash_attention_ref(q, kf, vf, cfg_kv=cfg_kv, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_flash_attention_decode_shape(rng):
+    """Sq=1 decode against a long KV context (the serve_step hot path)."""
+    BH, SKV, D = 8, 333, 128
+    q = jnp.asarray(rng.normal(size=(BH, 1, D)), jnp.float32)
+    k = f32_to_posit(jnp.asarray(rng.normal(size=(BH, SKV, D)), jnp.float32), P16_2)
+    v = f32_to_posit(jnp.asarray(rng.normal(size=(BH, SKV, D)), jnp.float32), P16_2)
+    got = KF.flash_attention(q, k, v, cfg_kv=P16_2, causal=True, bq=8, bk=128,
+                             interpret=True)
+    want = R.flash_attention_ref(q, k, v, cfg_kv=P16_2, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_kernel_dispatch_ref_path(rng):
+    """kernels.ops must route to ref on CPU (use_pallas False by default)."""
+    from repro.kernels import ops as kops
+    assert not kops.use_pallas()
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    w = f32_to_posit(jnp.asarray(rng.normal(size=(8, 16)), jnp.float32), P16_2)
+    out = kops.pw_matmul(x, w, P16_2)
+    assert out.shape == (4, 16)

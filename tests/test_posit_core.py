@@ -1,0 +1,138 @@
+"""Bit-exactness of the posit core: golden model vs f64 semantics, and the
+JAX integer datapath vs the golden model (the paper's §VII validation flow).
+
+posit8: exhaustive over all operand pairs (65 536 per op per ES).
+posit16: 200k sampled pairs per op per ES.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import golden as G
+from repro.core import ops as O
+from repro.core.convert import f32_to_posit, posit_to_f32
+from repro.core.types import PositConfig, table2_grid
+
+P8S = [PositConfig(8, es) for es in range(5)]
+P16S = [PositConfig(16, es) for es in range(4)]
+
+
+def _pairs(cfg, n=200_000, seed=0):
+    if cfg.n <= 8:
+        bits = np.arange(1 << cfg.n)
+        A, B = np.meshgrid(bits, bits)
+        return A.ravel(), B.ravel()
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 1 << cfg.n, n), rng.integers(0, 1 << cfg.n, n))
+
+
+# ---------------- golden vs float64 semantics ----------------
+@pytest.mark.parametrize("cfg", P8S, ids=str)
+def test_golden_roundtrip_exhaustive(cfg):
+    bits = np.arange(1 << cfg.n)
+    v = G.decode_to_float64(bits, cfg)
+    back = G.encode_from_float64(v, cfg)
+    ok = (back == bits) | (~np.isfinite(v) & (back == cfg.nar))
+    assert ok.all()
+
+
+@pytest.mark.parametrize("cfg", P8S, ids=str)
+def test_golden_ops_vs_f64_exhaustive(cfg):
+    A, B = _pairs(cfg)
+    va, vb = G.decode_to_float64(A, cfg), G.decode_to_float64(B, cfg)
+    assert (G.padd(A, B, cfg) == G.encode_from_float64(va + vb, cfg)).all()
+    assert (G.pmul(A, B, cfg) == G.encode_from_float64(va * vb, cfg)).all()
+    q = np.divide(va, vb, out=np.full_like(va, np.nan), where=vb != 0)
+    want = np.where(vb == 0, cfg.nar, G.encode_from_float64(q, cfg))
+    assert (G.pdiv(A, B, cfg) == want).all()
+
+
+# ---------------- JAX datapath vs golden ----------------
+@pytest.mark.parametrize("cfg", P8S + P16S, ids=str)
+def test_jax_ops_bit_exact(cfg):
+    A, B = _pairs(cfg)
+    Aj = jnp.asarray(A, jnp.int32)
+    Bj = jnp.asarray(B, jnp.int32)
+    m = cfg.mask
+    assert (np.asarray(O.padd(Aj, Bj, cfg)).astype(np.int64) & m
+            == G.padd(A, B, cfg)).all()
+    assert (np.asarray(O.pmul(Aj, Bj, cfg)).astype(np.int64) & m
+            == G.pmul(A, B, cfg)).all()
+    assert (np.asarray(O.psub(Aj, Bj, cfg)).astype(np.int64) & m
+            == G.psub(A, B, cfg)).all()
+    wantd = G.pdiv(A, B, cfg)
+    for mode in ("exact", "poly_corrected"):
+        got = np.asarray(O.pdiv(Aj, Bj, cfg, mode=mode)).astype(np.int64) & m
+        assert (got == wantd).all(), mode
+
+
+@pytest.mark.parametrize("cfg", [PositConfig(8, 2), PositConfig(16, 2)],
+                         ids=str)
+def test_jax_fma_bit_exact(cfg):
+    rng = np.random.default_rng(1)
+    n = 50_000
+    A, B, C = (rng.integers(0, 1 << cfg.n, n) for _ in range(3))
+    got = np.asarray(O.pfma(jnp.asarray(A, jnp.int32), jnp.asarray(B, jnp.int32),
+                            jnp.asarray(C, jnp.int32), cfg)).astype(np.int64) & cfg.mask
+    assert (got == G.pfma(A, B, C, cfg)).all()
+
+
+@pytest.mark.parametrize("cfg", P8S + P16S, ids=str)
+def test_conversions_exact(cfg):
+    bits = np.arange(1 << cfg.n) if cfg.n <= 8 else \
+        np.random.default_rng(2).integers(0, 1 << cfg.n, 100_000)
+    v64 = G.decode_to_float64(bits, cfg)
+    # decode f32 == golden f64 (exact for n<=16)
+    vj = np.asarray(posit_to_f32(jnp.asarray(bits, jnp.int32), cfg), np.float64)
+    ok = (vj == v64) | (np.isnan(vj) & np.isnan(v64))
+    assert ok.all()
+    # f32 encode == golden encode
+    vv = v64.astype(np.float32)
+    pj = np.asarray(f32_to_posit(jnp.asarray(vv), cfg)).astype(np.int64) & cfg.mask
+    assert (pj == G.encode_from_float64(vv.astype(np.float64), cfg)).all()
+
+
+def test_table2_wrong_rates_match_paper_scale():
+    """The approximate (paper) division pipeline should sit at/below the
+    paper's proposed wrong-%s (Table II): p8 <= ~8%, p16es2 <= ~1%."""
+    from repro.core.types import P8_0, P16_2
+    for cfg, bound in ((P8_0, 8.0), (P16_2, 1.0)):
+        A, B = _pairs(cfg, n=100_000)
+        want = G.pdiv(A, B, cfg)
+        got = np.asarray(O.pdiv(jnp.asarray(A, jnp.int32),
+                                jnp.asarray(B, jnp.int32), cfg,
+                                mode="poly", nr_rounds=1)).astype(np.int64) & cfg.mask
+        assert 100.0 * (got != want).mean() <= bound
+
+
+def test_quire_dot_exact():
+    cfg = PositConfig(16, 2)
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 1 << 16, 128)
+    y = rng.integers(0, 1 << 16, 128)
+    x = np.where(x == cfg.nar, 0, x)
+    y = np.where(y == cfg.nar, 0, y)
+    import math
+    vx, vy = G.decode_to_float64(x, cfg), G.decode_to_float64(y, cfg)
+    exact = math.fsum(float(a) * float(b) for a, b in zip(vx, vy))
+    assert G.quire_dot(x, y, cfg) == int(
+        G.encode_from_float64(np.array(exact), cfg))
+
+
+def test_packing_roundtrip_and_simd_map():
+    from repro.core.packing import lanes, pack_words, packed_map, unpack_words
+    from repro.core.types import P8_2, P16_2
+    rng = np.random.default_rng(4)
+    for cfg, dt in ((P8_2, jnp.int8), (P16_2, jnp.int16)):
+        x = jnp.asarray(rng.integers(-(1 << (cfg.n - 1)), 1 << (cfg.n - 1),
+                                     (8, 32)), dt)
+        y = jnp.asarray(rng.integers(-(1 << (cfg.n - 1)), 1 << (cfg.n - 1),
+                                     (8, 32)), dt)
+        w = pack_words(x, cfg)
+        assert w.shape[-1] == 32 // lanes(cfg)
+        assert (unpack_words(w, cfg) == x).all()
+        pm = unpack_words(packed_map(O.padd, pack_words(x, cfg),
+                                     pack_words(y, cfg), cfg), cfg)
+        assert (np.asarray(pm).astype(np.int64) & cfg.mask
+                == np.asarray(O.padd(x, y, cfg)).astype(np.int64) & cfg.mask).all()

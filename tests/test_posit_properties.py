@@ -1,0 +1,125 @@
+"""Hypothesis property-based tests for posit arithmetic invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import golden as G
+from repro.core import ops as O
+from repro.core.types import PositConfig
+
+CFGS = [PositConfig(8, 0), PositConfig(8, 2), PositConfig(16, 1),
+        PositConfig(16, 2)]
+
+cfg_st = st.sampled_from(CFGS)
+
+
+def bits_st(cfg):
+    return st.integers(0, (1 << cfg.n) - 1)
+
+
+@given(cfg=cfg_st, data=st.data())
+@settings(max_examples=300, deadline=None)
+def test_commutativity(cfg, data):
+    a = data.draw(bits_st(cfg))
+    b = data.draw(bits_st(cfg))
+    aj, bj = jnp.int32(a), jnp.int32(b)
+    assert int(O.padd(aj, bj, cfg)) == int(O.padd(bj, aj, cfg))
+    assert int(O.pmul(aj, bj, cfg)) == int(O.pmul(bj, aj, cfg))
+
+
+@given(cfg=cfg_st, data=st.data())
+@settings(max_examples=300, deadline=None)
+def test_negation_symmetry(cfg, data):
+    """round(-a + -b) == -round(a + b): RNE is sign-symmetric."""
+    a = data.draw(bits_st(cfg))
+    b = data.draw(bits_st(cfg))
+    if a == cfg.nar or b == cfg.nar:
+        return
+    aj, bj = jnp.int32(a), jnp.int32(b)
+    s = O.padd(aj, bj, cfg)
+    sn = O.padd(O.pneg(aj, cfg).astype(jnp.int32),
+                O.pneg(bj, cfg).astype(jnp.int32), cfg)
+    assert int(O.pneg(s.astype(jnp.int32), cfg)) & cfg.mask == int(sn) & cfg.mask
+
+
+@given(cfg=cfg_st, data=st.data())
+@settings(max_examples=300, deadline=None)
+def test_identities(cfg, data):
+    a = data.draw(bits_st(cfg))
+    if a == cfg.nar:
+        return
+    aj = jnp.int32(a)
+    one = jnp.int32(1 << (cfg.n - 2))
+    zero = jnp.int32(0)
+    assert int(O.pmul(aj, one, cfg)) & cfg.mask == a          # x*1 == x
+    assert int(O.padd(aj, zero, cfg)) & cfg.mask == a         # x+0 == x
+    assert int(O.pdiv(aj, one, cfg, mode="exact")) & cfg.mask == a
+    # x - x == 0
+    assert int(O.psub(aj, aj, cfg)) & cfg.mask == 0
+    # x / x == 1 for nonzero
+    if a != 0:
+        assert int(O.pdiv(aj, aj, cfg, mode="poly_corrected")) & cfg.mask == int(one)
+
+
+@given(cfg=cfg_st, data=st.data())
+@settings(max_examples=300, deadline=None)
+def test_nar_propagation(cfg, data):
+    a = data.draw(bits_st(cfg))
+    nar = jnp.int32(cfg.nar)
+    aj = jnp.int32(a)
+    for op in (O.padd, O.pmul, O.psub):
+        assert int(op(aj, nar, cfg)) & cfg.mask == cfg.nar
+    assert int(O.pdiv(aj, nar, cfg)) & cfg.mask == cfg.nar
+    assert int(O.pdiv(aj, jnp.int32(0), cfg)) & cfg.mask == cfg.nar  # x/0
+
+
+@given(cfg=cfg_st, data=st.data())
+@settings(max_examples=300, deadline=None)
+def test_pattern_monotonicity(cfg, data):
+    """Posit patterns compare as 2's-complement ints (paper §VIII)."""
+    a = data.draw(bits_st(cfg))
+    b = data.draw(bits_st(cfg))
+    if cfg.nar in (a, b):
+        return
+    va, vb = (float(G.decode_to_float64(np.array([x]), cfg)[0]) for x in (a, b))
+    got = bool(O.plt(jnp.int32(a), jnp.int32(b), cfg))
+    assert got == (va < vb)
+
+
+@given(cfg=cfg_st, v=st.floats(-1e6, 1e6, allow_nan=False))
+@settings(max_examples=300, deadline=None)
+def test_encode_is_nearest(cfg, v):
+    """f32->posit must return one of the two bracketing posits, preferring
+    the closer (exact RNE checked against the golden f64 encode)."""
+    from repro.core.convert import f32_to_posit
+    got = int(np.asarray(f32_to_posit(jnp.float32(v), cfg))) & cfg.mask
+    want = int(G.encode_from_float64(np.array(np.float32(v), np.float64), cfg))
+    assert got == want
+
+
+@given(cfg=cfg_st, data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_double_encode_idempotent(cfg, data):
+    a = data.draw(bits_st(cfg))
+    if a == cfg.nar:
+        return
+    from repro.core.convert import f32_to_posit, posit_to_f32
+    v = posit_to_f32(jnp.int32(a), cfg)
+    assert int(np.asarray(f32_to_posit(v, cfg))) & cfg.mask == a
+
+
+@given(data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_add_magnitude_bounds(data):
+    """|round(a+b)| lies within the posit range and saturates, never wraps."""
+    cfg = PositConfig(8, 0)
+    a = data.draw(bits_st(cfg))
+    b = data.draw(bits_st(cfg))
+    if cfg.nar in (a, b):
+        return
+    out = int(O.padd(jnp.int32(a), jnp.int32(b), cfg)) & cfg.mask
+    va, vb = (G.decode_to_float64(np.array([x]), cfg)[0] for x in (a, b))
+    vo = G.decode_to_float64(np.array([out]), cfg)[0]
+    assert not np.isnan(vo)
+    hi = G.decode_to_float64(np.array([cfg.maxpos_bits]), cfg)[0]
+    assert abs(vo) <= hi

@@ -1,0 +1,87 @@
+"""Sharding rules: divisibility guards, strategy selection, spec shapes.
+
+These run on 1 device against a *mock* mesh-shape object — the real
+512-device lowering is exercised by launch/dryrun.py (see EXPERIMENTS.md).
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.distributed import sharding as sh
+from repro.models.transformer import init_params
+
+
+class MockMesh:
+    shape = {"pod": 2, "data": 16, "model": 16}
+    size = 512
+
+
+MESH = MockMesh()
+
+
+def test_strategy_selection():
+    get = configs.get_config
+    assert sh.strategy_for(get("qwen1.5-110b"), MESH) == "tp2d"
+    assert sh.strategy_for(get("qwen3-moe-235b-a22b"), MESH) == "tp2d"
+    for small in ("smollm-360m", "gemma-2b", "rwkv6-3b", "internlm2-20b",
+                  "hubert-xlarge", "olmoe-1b-7b", "recurrentgemma-9b"):
+        assert sh.strategy_for(get(small), MESH) == "fsdp", small
+
+
+def _leaf_specs(arch, strategy, multi_pod=False):
+    cfg = configs.get_smoke(arch)
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return shapes, sh.param_pspecs(shapes, MESH, multi_pod, strategy)
+
+
+def test_specs_rank_matches_and_divisible():
+    for arch in configs.ARCHS:
+        for strategy in ("tp2d", "fsdp"):
+            shapes, specs = _leaf_specs(arch, strategy)
+            for (path, leaf), (_, spec) in zip(
+                    jax.tree_util.tree_flatten_with_path(shapes)[0],
+                    jax.tree_util.tree_flatten_with_path(
+                        specs, is_leaf=lambda x: isinstance(x, P))[0]):
+                assert len(spec) <= leaf.ndim, (arch, path, spec, leaf.shape)
+                for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+                    if ax is None:
+                        continue
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    n = 1
+                    for a in axes:
+                        n *= MESH.shape[a]
+                    assert dim % n == 0, (arch, path, spec, leaf.shape)
+
+
+def test_full_config_tp2d_rules_hit_big_weights():
+    """For the TP archs, the big weight matrices must actually shard."""
+    cfg = configs.get_config("qwen1.5-110b")
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs = sh.param_pspecs(shapes, MESH, False, "tp2d")
+    flat = {sh._path_str(p): (l, s) for (p, l), (_, s) in zip(
+        jax.tree_util.tree_flatten_with_path(shapes)[0],
+        jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))[0])}
+    wq = next(v for k, v in flat.items() if k.endswith("attn/wq/w"))
+    assert "model" in str(wq[1])
+    table = next(v for k, v in flat.items() if k.endswith("embed/table"))
+    assert str(table[1]) != "PartitionSpec()"
+
+
+def test_batch_pspecs_fallbacks():
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 4097), jnp.int32)}
+    spec = sh.batch_pspecs(batch, MESH, False, strategy="fsdp")["tokens"]
+    assert spec[0] == ("data", "model")
+    batch = {"tokens": jax.ShapeDtypeStruct((128, 10), jnp.int32)}
+    spec = sh.batch_pspecs(batch, MESH, False, strategy="fsdp")["tokens"]
+    assert spec[0] in ("data", ("data",))   # 128 % 256 != 0 -> next candidate
+    batch = {"tokens": jax.ShapeDtypeStruct((1, 524288), jnp.int32)}
+    spec = sh.batch_pspecs(batch, MESH, False, shard_seq=True,
+                           strategy="fsdp")["tokens"]
+    assert spec == P(None, "data")      # B=1: sequence parallelism
+
+
+def test_shard_activation_is_identity_without_context():
+    x = jnp.ones((4, 8))
+    assert sh.shard_activation(x, "act") is x

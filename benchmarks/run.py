@@ -11,6 +11,8 @@ Modules <-> paper artifacts:
     dnn_accuracy         Fig. 7/8 (synthetic-data proxy; see module docstring)
     throughput           Table V / §VIII-A (TPU-transferable parts)
     roofline             EXPERIMENTS.md §Roofline assembler (from dry-run)
+    api_overhead         pnp/PositArray dispatch vs raw functional calls
+                         (beyond-paper; must be ~1.0x after jit tracing)
 """
 from __future__ import annotations
 
@@ -37,7 +39,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (division_accuracy, dnn_accuracy,
+    from benchmarks import (api_overhead, division_accuracy, dnn_accuracy,
                             linear_algebra_error, roofline, throughput)
     modules = {
         "division_accuracy": division_accuracy,
@@ -45,6 +47,7 @@ def main() -> None:
         "dnn_accuracy": dnn_accuracy,
         "throughput": throughput,
         "roofline": roofline,
+        "api_overhead": api_overhead,
     }
     if args.only:
         modules = {args.only: modules[args.only]}

@@ -1,38 +1,57 @@
 """Quickstart: posit arithmetic as a drop-in number format (paper §III-§VI).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+The first-class API is `repro.pnp` + `PositArray`: the posit format is
+bound to the array (like the FPPU register file binds it to the register),
+so no call ever re-states a config.  The functional intrinsics
+(`repro.core.padd` etc.) remain available as the low-level/legacy layer.
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (P8_2, P16_2, f32_to_posit, posit_to_f32, padd, pmul,
-                        pdiv, pfma, quire_matmul)
+import repro.pnp as pnp
+from repro.core import P8_2, P16_2
 
 # --- scalars through the FPPU datapath -----------------------------------
-a = f32_to_posit(jnp.float32(1.25), P16_2)     # PFCVT.P
-b = f32_to_posit(jnp.float32(-0.375), P16_2)
-print("a bits:", hex(int(a) & 0xFFFF), "value:", float(posit_to_f32(a, P16_2)))
+a = pnp.asarray(1.25, P16_2)                   # PFCVT: f32 -> posit
+b = pnp.asarray(-0.375, P16_2)
+print("a bits:", hex(int(a.bits) & 0xFFFF), "value:", float(a.to_f32()))
 
-s = padd(a, b, P16_2)                          # PADD
-p = pmul(a, b, P16_2)                          # PMUL
-q = pdiv(a, b, P16_2, mode="poly")             # PDIV (paper's Alg.1 + NR)
-f = pfma(a, b, s, P16_2)                       # PFMADD (fused, one rounding)
-for name, x in (("a+b", s), ("a*b", p), ("a/b", q), ("fma", f)):
-    print(f"{name:5s} = {float(posit_to_f32(x, P16_2)):+.6f}")
+s = a + b                                      # PADD
+p = a * b                                      # PMUL
+q = pnp.divide(a, b, mode="poly")              # PDIV (paper's Alg.1 + NR)
+f = pnp.fma(a, b, s)                           # PFMADD (fused, one rounding)
+r = pnp.reciprocal(b)                          # inversion
+for name, x in (("a+b", s), ("a*b", p), ("a/b", q), ("fma", f), ("1/b", r)):
+    print(f"{name:5s} = {float(x.to_f32()):+.6f}")
 
-# --- the paper's intrinsic-style GEMM (Listing 2), vectorized -------------
+# comparisons are free (bit patterns order as 2's-complement ints, §VIII)
+print("a > b:", bool(a > b), "| a == a:", bool(pnp.equal(a, a)))
+
+# --- the paper's intrinsic-style GEMM (Listing 2), now just `@` -----------
 rng = np.random.default_rng(0)
-A = f32_to_posit(jnp.asarray(rng.normal(size=(8, 8)), jnp.float32), P8_2)
-B = f32_to_posit(jnp.asarray(rng.normal(size=(8, 8)), jnp.float32), P8_2)
-C = quire_matmul(A, B, P8_2)                   # decode -> MXU f32 quire -> round
-Cf = posit_to_f32(C, P8_2)
-ref = (posit_to_f32(A, P8_2) @ posit_to_f32(B, P8_2))
+A = pnp.asarray(rng.normal(size=(8, 8)).astype(np.float32), P8_2)
+B = pnp.asarray(rng.normal(size=(8, 8)).astype(np.float32), P8_2)
+C = A @ B                                      # decode -> MXU f32 quire -> round
+Cf = C.to_f32()
+ref = A.to_f32() @ B.to_f32()
 print("posit8 GEMM NME vs f32:",
       float(jnp.mean(jnp.abs((Cf - ref) / (jnp.abs(ref) + 1e-9)))))
 
+# mixed formats never combine silently:
+try:
+    _ = A + pnp.ones((8, 8), P16_2)
+except pnp.PositConfigMismatchError as e:
+    print("mixed-format guard:", type(e).__name__)
+
 # --- SIMD packing (paper §VIII-A): 4 posit8 lanes per 32-bit word ---------
-from repro.core import pack_words, unpack_words, packed_map
-w1 = pack_words(A.reshape(8, 8), P8_2)
-w2 = pack_words(B.reshape(8, 8), P8_2)
-lanes_sum = unpack_words(packed_map(padd, w1, w2, P8_2), P8_2)
-print("packed word shape:", w1.shape, "->", lanes_sum.shape, "(4 lanes/word)")
+w1, w2 = pnp.pack(A), pnp.pack(B)
+lanes_sum = pnp.unpack(w1, P8_2) + pnp.unpack(w2, P8_2)
+print("packed word shape:", w1.shape, "->", lanes_sum.shape,
+      f"({pnp.lanes(P8_2)} lanes/word)")
+
+# --- legacy functional layer (deprecated shims; bit-identical) ------------
+from repro.core import padd
+assert (np.asarray(padd(A.bits, B.bits, P8_2)) == np.asarray((A + B).bits)).all()
+print("legacy padd(bits, bits, cfg) == PositArray __add__: OK")

@@ -1,4 +1,6 @@
 """Posit arithmetic core — the paper's contribution as a composable JAX module."""
+from repro.core.array import (PositArray, PositConfigMismatchError, is_posit,
+                              result_cfg)
 from repro.core.types import (P8_0, P8_2, P16_1, P16_2, P32_2, STANDARD,
                               PositConfig, table2_grid)
 from repro.core.decode import decode, decode_to_f32
@@ -11,6 +13,7 @@ from repro.core.packing import lanes, pack_words, packed_map, unpack_words
 from repro.core.quire import quire_dot, quire_matmul
 
 __all__ = [
+    "PositArray", "PositConfigMismatchError", "is_posit", "result_cfg",
     "PositConfig", "P8_0", "P8_2", "P16_1", "P16_2", "P32_2", "STANDARD",
     "table2_grid", "decode", "decode_to_f32", "encode_fir", "to_storage",
     "padd", "psub", "pmul", "pdiv", "pfma", "pneg", "pabs", "precip",

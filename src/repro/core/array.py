@@ -1,0 +1,319 @@
+"""First-class posit arrays — the software analogue of the FPPU register file.
+
+The paper's ISA makes posits a machine type: once a value sits in the posit
+register file, PADD/PMUL/PFMADD know its format without the programmer
+re-stating it (§VI).  `PositArray` gives the JAX reproduction the same
+property: it binds the payload bits (narrow storage ints) to their
+`PositConfig`, so the format travels with the array instead of being
+threaded as a `cfg` argument through every call site.
+
+Design rules:
+  * `PositArray` is a registered JAX pytree — the bits are the (single)
+    traced child, the `PositConfig` is static aux data — so it passes
+    transparently through `jax.jit`, `jax.vmap`, `lax.scan`, shardings and
+    checkpoint flattening.
+  * Operators dispatch through `repro.kernels.ops`, so the Pallas-vs-jnp
+    routing (`use_pallas`) is invisible to callers and results are
+    bit-identical to the functional `core.ops` intrinsics.
+  * Mixed formats never silently reinterpret: combining two PositArrays
+    with different configs raises `PositConfigMismatchError`; int arrays are
+    never implicitly treated as posit payloads (use `frombits`).  Python
+    scalars and float arrays are *values* and are correctly rounded into the
+    array's own format before the op.
+  * Gradients: the bits are integers and carry no tangents.  Training flows
+    cross the posit boundary through the straight-through estimator
+    (`repro.quant.policy.posit_cast_ste`, re-exported as `repro.pnp.ste`),
+    exactly as the QAT path in `models/blocks.py` does.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PositConfig
+
+
+class PositConfigMismatchError(ValueError):
+    """Two posit operands carry different formats; no silent reinterpretation."""
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class PositArray:
+    """Payload bits + format, behaving like a numpy array of posit values.
+
+    Construct via `repro.pnp.asarray` (from float values) or
+    `repro.pnp.frombits` (from existing payload ints); the raw constructor
+    performs no conversion and only light validation so traced values,
+    `ShapeDtypeStruct`s and numpy arrays all pass through (pytree
+    unflattening must stay trivial).
+    """
+
+    __slots__ = ("bits", "cfg")
+
+    # keep numpy from claiming `np_array <op> posit_array`: defer to our
+    # reflected operators instead of ufunc broadcasting over the object
+    __array_ufunc__ = None
+    __array_priority__ = 100
+
+    def __init__(self, bits: Any, cfg: PositConfig):
+        if not isinstance(cfg, PositConfig):
+            raise TypeError(f"cfg must be a PositConfig, got {type(cfg)!r}")
+        self.bits = bits
+        self.cfg = cfg
+
+    # ---- pytree protocol: bits traced, cfg static --------------------------
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("bits"), self.bits),), self.cfg
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        (bits,) = children
+        return cls(bits, cfg)
+
+    # ---- array metadata passthrough ---------------------------------------
+    @property
+    def shape(self):
+        return self.bits.shape
+
+    @property
+    def ndim(self):
+        return self.bits.ndim
+
+    @property
+    def size(self):
+        return self.bits.size
+
+    @property
+    def dtype(self):
+        """Storage dtype of the payload (int8/int16/int32)."""
+        return self.bits.dtype
+
+    @property
+    def nbytes(self):
+        return self.bits.nbytes
+
+    def __len__(self):
+        return len(self.bits)
+
+    def __getitem__(self, idx):
+        return PositArray(self.bits[idx], self.cfg)
+
+    def reshape(self, *shape):
+        return PositArray(self.bits.reshape(*shape), self.cfg)
+
+    def transpose(self, *axes):
+        return PositArray(self.bits.transpose(*axes), self.cfg)
+
+    @property
+    def T(self):
+        return PositArray(self.bits.T, self.cfg)
+
+    def ravel(self):
+        return PositArray(self.bits.ravel(), self.cfg)
+
+    def flatten(self):
+        return self.ravel()
+
+    def squeeze(self, axis=None):
+        return PositArray(jnp.squeeze(self.bits, axis), self.cfg)
+
+    def __repr__(self):
+        return (f"PositArray({self.cfg}, shape={tuple(jnp.shape(self.bits))}, "
+                f"dtype={getattr(self.bits, 'dtype', '?')})")
+
+    # equality-as-elementwise makes the object unhashable, like numpy arrays
+    __hash__ = None  # type: ignore[assignment]
+
+    # ---- conversions -------------------------------------------------------
+    def to_f32(self) -> jnp.ndarray:
+        """Exact decode to float32 (PFCVT.S); NaR -> NaN."""
+        from repro.kernels import ops as kops
+        return kops.decode(self.bits, self.cfg)
+
+    def to_bf16(self) -> jnp.ndarray:
+        return self.to_f32().astype(jnp.bfloat16)
+
+    def astype(self, cfg: PositConfig) -> "PositArray":
+        """Re-round into another posit format (exact when widening, single
+        correctly-rounded step when narrowing, for n <= 16)."""
+        if not isinstance(cfg, PositConfig):
+            raise TypeError("astype takes a PositConfig; use to_f32()/to_bf16()"
+                            " for float outputs")
+        if cfg == self.cfg:
+            return self
+        from repro.kernels import ops as kops
+        return PositArray(kops.encode(self.to_f32(), cfg), cfg)
+
+    # ---- operand coercion --------------------------------------------------
+    def _coerce(self, other) -> "PositArray":
+        """Bring `other` into this array's format, or fail loudly.
+
+        PositArray: formats must match exactly.  Python scalars / float
+        arrays: correctly rounded into self.cfg (they are *values*).  Int
+        arrays are rejected — ambiguous between values and payload bits.
+        """
+        if isinstance(other, PositArray):
+            if other.cfg != self.cfg:
+                raise PositConfigMismatchError(
+                    f"cannot combine {self.cfg} with {other.cfg}; cast "
+                    f"explicitly with .astype()")
+            return other
+        if isinstance(other, (bool, int, float)):
+            from repro.kernels import ops as kops
+            bits = kops.encode(jnp.full((), float(other), jnp.float32),
+                               self.cfg)
+            return PositArray(bits, self.cfg)
+        dt = getattr(other, "dtype", None)
+        if dt is not None and jnp.issubdtype(dt, jnp.floating):
+            from repro.kernels import ops as kops
+            return PositArray(kops.encode(jnp.asarray(other, jnp.float32),
+                                          self.cfg), self.cfg)
+        raise TypeError(
+            f"cannot mix PositArray with {type(other).__name__}: int arrays "
+            f"are ambiguous (values vs payload bits) — wrap payloads with "
+            f"pnp.frombits(x, cfg) or convert values with pnp.asarray")
+
+    # ---- arithmetic: dispatches through kernels.ops ------------------------
+    def _ew(self, other, op: str, reverse: bool = False) -> "PositArray":
+        other = self._coerce(other)
+        a, b = (other, self) if reverse else (self, other)
+        from repro.kernels import ops as kops
+        return PositArray(kops.elementwise(op, a.bits, b.bits, cfg=self.cfg),
+                          self.cfg)
+
+    def __add__(self, other):
+        return self._ew(other, "add")
+
+    def __radd__(self, other):
+        return self._ew(other, "add", reverse=True)
+
+    def __sub__(self, other):
+        return self._ew(other, "sub")
+
+    def __rsub__(self, other):
+        return self._ew(other, "sub", reverse=True)
+
+    def __mul__(self, other):
+        return self._ew(other, "mul")
+
+    def __rmul__(self, other):
+        return self._ew(other, "mul", reverse=True)
+
+    def __truediv__(self, other):
+        other = self._coerce(other)
+        from repro.kernels import ops as kops
+        return PositArray(kops.divide(self.bits, other.bits, cfg=self.cfg),
+                          self.cfg)
+
+    def __rtruediv__(self, other):
+        other = self._coerce(other)
+        from repro.kernels import ops as kops
+        return PositArray(kops.divide(other.bits, self.bits, cfg=self.cfg),
+                          self.cfg)
+
+    def __matmul__(self, other):
+        other = self._coerce(other)
+        from repro.kernels import ops as kops
+        out = kops.gemm(self.bits, other.bits, cfg_a=self.cfg, cfg_b=self.cfg,
+                        cfg_out=self.cfg, out_posit=True)
+        return PositArray(out, self.cfg)
+
+    def __neg__(self):
+        from repro.core.ops import pneg
+        return PositArray(pneg(self.bits, self.cfg), self.cfg)
+
+    def __pos__(self):
+        return self
+
+    def __abs__(self):
+        from repro.core.ops import pabs
+        return PositArray(pabs(self.bits, self.cfg), self.cfg)
+
+    # ---- comparisons: free on the bit patterns (paper §VIII) ---------------
+    def __lt__(self, other):
+        from repro.core.ops import plt
+        return plt(self.bits, self._coerce(other).bits, self.cfg)
+
+    def __gt__(self, other):
+        from repro.core.ops import plt
+        return plt(self._coerce(other).bits, self.bits, self.cfg)
+
+    def __le__(self, other):
+        from repro.core.ops import plt
+        return ~plt(self._coerce(other).bits, self.bits, self.cfg)
+
+    def __ge__(self, other):
+        from repro.core.ops import plt
+        return ~plt(self.bits, self._coerce(other).bits, self.cfg)
+
+    def _coerce_or_foreign(self, other):
+        """_coerce, but mapping only truly-foreign types to None (so ==/!=
+        can fall back to identity).  Format mismatches and ambiguous int
+        arrays stay loud — a silent scalar False against payload bits is
+        exactly the wrong-predicate bug the guards exist to prevent."""
+        try:
+            return self._coerce(other)
+        except PositConfigMismatchError:
+            raise
+        except TypeError:
+            dt = getattr(other, "dtype", None)
+            if dt is not None and jnp.issubdtype(dt, jnp.integer):
+                raise               # ambiguous bits-vs-values: keep loud
+            return None             # foreign type (None, str, ...): defer
+
+    def __eq__(self, other):  # type: ignore[override]
+        from repro.core.ops import peq
+        other = self._coerce_or_foreign(other)
+        if other is None:
+            return NotImplemented
+        return peq(self.bits, other.bits, self.cfg)
+
+    def __ne__(self, other):  # type: ignore[override]
+        from repro.core.ops import peq
+        other = self._coerce_or_foreign(other)
+        if other is None:
+            return NotImplemented
+        return ~peq(self.bits, other.bits, self.cfg)
+
+
+def is_posit(x) -> bool:
+    return isinstance(x, PositArray)
+
+
+def unwrap_kv(k, v, cfg: PositConfig | None = None, q=None):
+    """Shared attention-entry unwrap: (k, v[, explicit cfg]) -> raw buffers
+    + resolved KV format.  k and v must be both PositArray or both raw —
+    one operand's format is never applied to a float operand.  Pass `q` to
+    also enforce that queries stay float (activations, never posit pages)."""
+    if isinstance(q, PositArray):
+        raise TypeError("q must be a float array (queries are activations); "
+                        "only the KV pages may be posit")
+    if isinstance(k, PositArray) or isinstance(v, PositArray):
+        if not (isinstance(k, PositArray) and isinstance(v, PositArray)):
+            raise TypeError("k and v must both be PositArray (or both raw): "
+                            "one operand's format cannot be applied to a "
+                            "float operand")
+        cfg = result_cfg(k, v, cfg=cfg)
+        return k.bits, v.bits, cfg
+    return k, v, cfg
+
+
+def result_cfg(*operands, cfg: PositConfig | None = None) -> PositConfig:
+    """Resolve the common format of a mixed operand list.
+
+    Every PositArray operand must agree; an explicit `cfg` must agree with
+    all of them.  Raises if no format can be determined.
+    """
+    out = cfg
+    for x in operands:
+        if isinstance(x, PositArray):
+            if out is not None and x.cfg != out:
+                raise PositConfigMismatchError(
+                    f"operand format {x.cfg} conflicts with {out}")
+            out = x.cfg
+    if out is None:
+        raise TypeError("no PositArray operand and no cfg given: cannot "
+                        "infer the posit format")
+    return out

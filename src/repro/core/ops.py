@@ -180,14 +180,9 @@ def pdiv(a, b, cfg: PositConfig, mode: str = "poly_corrected",
 
 def precip(b, cfg: PositConfig, mode: str = "poly_corrected") -> jnp.ndarray:
     """Reciprocal (the FPPU inversion op): 1/b."""
-    one = jnp.asarray(_one_bits(cfg), dtype=jnp.int32)
+    one = jnp.asarray(cfg.one_bits, dtype=jnp.int32)
     ones = jnp.broadcast_to(one, jnp.shape(b))
     return pdiv(ones, b, cfg, mode=mode)
-
-
-def _one_bits(cfg: PositConfig) -> int:
-    """Pattern of +1.0 = 0b01000...0."""
-    return 1 << (cfg.n - 2)
 
 
 # --------------------------------------------------------------------------

@@ -89,6 +89,11 @@ class PositConfig:
         return self.mask >> 1
 
     @property
+    def one_bits(self) -> int:
+        """Bit pattern of +1.0: 0b0100...0."""
+        return 1 << (self.n - 2)
+
+    @property
     def minpos_bits(self) -> int:
         """Bit pattern of the smallest positive posit: 000...01."""
         return 1

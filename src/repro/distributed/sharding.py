@@ -82,10 +82,18 @@ def _path_str(path) -> str:
     for k in path:
         if hasattr(k, "key"):
             parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
         elif hasattr(k, "idx"):
             parts.append(str(k.idx))
         else:
             parts.append(str(k))
+    # PositArray leaves flatten to a trailing GetAttrKey('bits') child; the
+    # rules name the parameter, so that key is transparent to the regexes
+    # (a genuine dict entry named "bits" is a DictKey and is kept)
+    if (path and isinstance(path[-1], jax.tree_util.GetAttrKey)
+            and path[-1].name == "bits"):
+        parts.pop()
     return "/".join(parts)
 
 

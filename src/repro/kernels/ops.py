@@ -3,6 +3,12 @@
 The model zoo calls these wrappers; the CPU dry-run/AOT compile lowers the
 jnp path (Pallas-for-TPU cannot lower on the CPU backend), real TPU runs
 take the fused kernels, and tests exercise both via interpret=True.
+
+Operands may be `PositArray` (format travels with the array; the `cfg_*`
+keywords stay unset) or raw storage-int arrays with an explicit config (the
+original, now-deprecated calling convention — kept as a shim).  When a
+posit-typed result is produced from PositArray inputs it comes back as a
+PositArray; raw-bit inputs keep getting raw bits out.
 """
 from __future__ import annotations
 
@@ -11,6 +17,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.array import (PositArray, PositConfigMismatchError,
+                              result_cfg, unwrap_kv)
 from repro.core.types import PositConfig
 from repro.kernels import flash_attention as _fa
 from repro.kernels import posit_codec as _codec
@@ -26,43 +34,129 @@ def use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def gemm(a, b, *, cfg_a: PositConfig | None, cfg_b: PositConfig | None,
+def _split(x, cfg: PositConfig | None):
+    """(operand, explicit-cfg) -> (raw bits/array, cfg, was_posit_array)."""
+    if isinstance(x, PositArray):
+        if cfg is not None and cfg != x.cfg:
+            raise PositConfigMismatchError(
+                f"explicit cfg {cfg} contradicts operand format {x.cfg}")
+        return x.bits, x.cfg, True
+    return x, cfg, False
+
+
+def _resolve_elementwise(op: str, inputs, cfg: PositConfig | None):
+    """Shared PositArray resolution for the elementwise-shaped ops:
+    returns (raw input tuple, cfg, any_posit).  Raw companions of
+    PositArray operands must be payload ints — float values consumed as
+    bit patterns are silent corruption."""
+    any_posit = any(isinstance(x, PositArray) for x in inputs)
+    if any_posit:
+        cfg = result_cfg(*inputs, cfg=cfg)
+        for x in inputs:
+            if isinstance(x, PositArray):
+                continue
+            dt = getattr(x, "dtype", None)
+            if (isinstance(x, (bool, int, float, complex))
+                    or (dt is not None and jnp.issubdtype(dt, jnp.floating))):
+                # python scalars are values, float arrays are values: both
+                # would be consumed as bit patterns here.  Only raw *int
+                # arrays* pass through (the documented payload-bits shim).
+                raise TypeError(
+                    f"{op}: cannot mix a PositArray with a python scalar or "
+                    f"float array — encode values with pnp.asarray(x, cfg) "
+                    f"or wrap payload bits with pnp.frombits")
+    if cfg is None:
+        raise TypeError(f"{op} needs PositArray inputs or an explicit cfg")
+    raw = tuple(x.bits if isinstance(x, PositArray) else x for x in inputs)
+    # broadcast to a common shape here, not in the kernels: the Pallas
+    # elementwise path tiles each input independently and would silently
+    # mis-align scalar/broadcast operands (the jnp ref path broadcasts
+    # anyway, so this is free there)
+    shape = jnp.broadcast_shapes(*(jnp.shape(x) for x in raw))
+    raw = tuple(jnp.broadcast_to(x, shape) for x in raw)
+    return raw, cfg, any_posit
+
+
+def gemm(a, b, *, cfg_a: PositConfig | None = None,
+         cfg_b: PositConfig | None = None,
          cfg_out: PositConfig | None = None, out_posit: bool = False):
+    a, cfg_a, a_posit = _split(a, cfg_a)
+    b, cfg_b, b_posit = _split(b, cfg_b)
+    # cfg-less *int* operands would be matmul'd as integer values: posit
+    # payload bits always need their format (floats are activations and
+    # legitimately skip the decode)
+    for raw, raw_cfg in ((a, cfg_a), (b, cfg_b)):
+        dt = getattr(raw, "dtype", None)
+        if (raw_cfg is None and dt is not None
+                and jnp.issubdtype(dt, jnp.integer)):
+            raise TypeError(
+                "gemm: int payload bits need their format — wrap them with "
+                "pnp.frombits(bits, cfg) or pass cfg_a/cfg_b")
+    if out_posit and cfg_out is None:
+        if (cfg_a is not None and cfg_b is not None and cfg_a != cfg_b):
+            raise PositConfigMismatchError(
+                f"mixed-format gemm ({cfg_a} @ {cfg_b}) with out_posit needs "
+                f"an explicit cfg_out")
+        cfg_out = cfg_a if cfg_a is not None else cfg_b
     if use_pallas():
-        return _gemm.posit_gemm(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
-                                cfg_out=cfg_out, out_posit=out_posit)
-    return _ref.posit_gemm_ref(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
+        out = _gemm.posit_gemm(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
                                cfg_out=cfg_out, out_posit=out_posit)
+    else:
+        out = _ref.posit_gemm_ref(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
+                                  cfg_out=cfg_out, out_posit=out_posit)
+    if out_posit and (a_posit or b_posit):
+        return PositArray(out, cfg_out)
+    return out
 
 
-def pw_matmul(x, w_bits, cfg: PositConfig):
-    """[..., k] @ posit-weight [k, n] -> f32 (the LM linear-layer hot path)."""
+def pw_matmul(x, w, cfg: PositConfig | None = None):
+    """[..., k] @ posit-weight [k, n] -> f32 (the LM linear-layer hot path).
+
+    `w` is a PositArray (preferred) or raw storage ints + explicit `cfg`
+    (deprecated shim).
+    """
+    w, cfg, _ = _split(w, cfg)
+    if cfg is None:
+        raise TypeError("pw_matmul needs a PositArray weight or explicit cfg")
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    out = gemm(x2, w_bits, cfg_a=None, cfg_b=cfg)
-    return out.reshape(*lead, w_bits.shape[-1])
+    out = gemm(x2, w, cfg_a=None, cfg_b=cfg)
+    return out.reshape(*lead, w.shape[-1])
 
 
-def elementwise(op: str, *inputs, cfg: PositConfig):
+def elementwise(op: str, *inputs, cfg: PositConfig | None = None):
+    raw, cfg, any_posit = _resolve_elementwise(f"elementwise('{op}')",
+                                               inputs, cfg)
     if use_pallas():
-        return _ew.elementwise(op, *inputs, cfg=cfg)
-    return _ref.elementwise_ref(op, *inputs, cfg=cfg)
+        out = _ew.elementwise(op, *raw, cfg=cfg)
+    else:
+        out = _ref.elementwise_ref(op, *raw, cfg=cfg)
+    return PositArray(out, cfg) if any_posit else out
 
 
-def divide(a, b, *, cfg: PositConfig, mode: str = "poly_corrected",
-           nr_rounds: int = 1):
+def divide(a, b, *, cfg: PositConfig | None = None,
+           mode: str = "poly_corrected", nr_rounds: int = 1):
+    (a, b), cfg, any_posit = _resolve_elementwise("divide", (a, b), cfg)
     if use_pallas():
-        return _ew.divide(a, b, cfg=cfg, mode=mode, nr_rounds=nr_rounds)
-    return _ref.divide_ref(a, b, cfg=cfg, mode=mode, nr_rounds=nr_rounds)
+        out = _ew.divide(a, b, cfg=cfg, mode=mode, nr_rounds=nr_rounds)
+    else:
+        out = _ref.divide_ref(a, b, cfg=cfg, mode=mode, nr_rounds=nr_rounds)
+    return PositArray(out, cfg) if any_posit else out
 
 
-def decode(p, cfg: PositConfig):
+def decode(p, cfg: PositConfig | None = None):
+    """Posit payload -> f32 values."""
+    p, cfg, _ = _split(p, cfg)
+    if cfg is None:
+        raise TypeError("decode needs a PositArray or explicit cfg")
     if use_pallas():
         return _codec.decode_block(p, cfg)
     return _ref.decode_ref(p, cfg)
 
 
 def encode(v, cfg: PositConfig):
+    """f32 values -> posit payload bits (raw; wrap via pnp.asarray for a
+    PositArray)."""
     if use_pallas():
         return _codec.encode_block(v, cfg)
     return _ref.encode_ref(v, cfg)
@@ -71,6 +165,7 @@ def encode(v, cfg: PositConfig):
 def attention(q, k, v, *, cfg_kv: PositConfig | None = None,
               causal: bool = True):
     """[BH, Sq, D] attention over (possibly posit) KV."""
+    k, v, cfg_kv = unwrap_kv(k, v, cfg_kv, q=q)
     if use_pallas():
         return _fa.flash_attention(q, k, v, cfg_kv=cfg_kv, causal=causal)
     return _ref.flash_attention_ref(q, k, v, cfg_kv=cfg_kv, causal=causal)

@@ -21,6 +21,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.array import PositArray
 from repro.core.types import PositConfig
 from repro.quant.policy import PositPolicy, posit_cast_ste
 
@@ -75,8 +76,13 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False) -> Params:
 
 def linear(x, p: Params, policy: PositPolicy | None = None):
     w = p["w"]
-    if w.dtype in (jnp.int8, jnp.int16):
-        # serving path: pre-quantized posit weights, decode fused in kernel
+    if isinstance(w, PositArray):
+        # serving path: pre-quantized posit weights carry their own format;
+        # decode is fused in the kernel
+        from repro.kernels import ops as kops
+        y = kops.pw_matmul(x, w).astype(x.dtype)
+    elif w.dtype in (jnp.int8, jnp.int16):
+        # deprecated shim: raw posit bits, format threaded via the policy
         from repro.kernels import ops as kops
         assert policy is not None and policy.weights is not None, (
             "int posit weights require policy.weights")
@@ -119,15 +125,19 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
     """GQA-aware flash-style attention, O(chunk^2) memory.
 
     q [B,H,Sq,D]; k/v [B,KV,Skv,D] with H = KV*G — the group dim is kept
-    explicit (no jnp.repeat materialization).  k/v may be posit storage ints
-    (cfg_kv set): each KV chunk is decoded to f32 right before its matmul,
-    mirroring the Pallas kernel's fused dequant — HBM traffic stays at posit
-    width and no full-cache float copy ever exists.
+    explicit (no jnp.repeat materialization).  k/v may be `PositArray` (the
+    format travels with the pages; `cfg_kv` stays unset) or raw posit
+    storage ints with the deprecated explicit `cfg_kv`: each KV chunk is
+    decoded to f32 right before its matmul, mirroring the Pallas kernel's
+    fused dequant — HBM traffic stays at posit width and no full-cache
+    float copy ever exists.
 
     q_offset: absolute position of q[0] (decode: cache length; may be traced).
     kv_len: number of valid KV positions (dynamic; default Skv).
     window: sliding-window size (local attention, recurrentgemma).
     """
+    from repro.core.array import unwrap_kv
+    k, v, cfg_kv = unwrap_kv(k, v, cfg_kv, q=q)
     B, H, Sq, D = q.shape
     KV = n_kv
     G = H // KV
@@ -268,9 +278,10 @@ def attention_block(x, p: Params, *, n_heads: int, n_kv: int, head_dim: int,
                     kv_cache=None, softcap: float | None = None):
     """Returns (out, new_kv_cache).  kv_cache: dict(k, v, length) or None.
 
-    k/v cache tensors are [B, n_kv, S_max, head_dim]; posit-quantized when
-    policy.kv_cache is set (storage ints; decoded for compute here, fused in
-    the Pallas kernel on TPU).
+    k/v cache tensors are [B, n_kv, S_max, head_dim]; PositArray pages when
+    the cache was initialized with a posit format (decoded for compute here,
+    fused in the Pallas kernel on TPU) — the format rides with the pages, so
+    nothing here re-states it.
     """
     B, S, _ = x.shape
     q = linear(x, p["wq"], policy).reshape(B, S, n_heads, head_dim)
@@ -283,21 +294,27 @@ def attention_block(x, p: Params, *, n_heads: int, n_kv: int, head_dim: int,
 
     new_cache = None
     kv_len = None
-    cfg_kv = None
+    legacy_cfg = None
     if kv_cache is not None:
         from repro.serving.kv_cache import append_kv
         q_offset = kv_cache["length"]               # traced scalar
-        new_cache = append_kv(kv_cache, k, v, policy.kv_cache)
-        # pass the raw (possibly posit-int) buffers: chunks decode in-scan
+        # legacy raw-int posit caches (pre-PositArray convention) still need
+        # the policy-threaded format; PositArray pages carry their own
+        if (not isinstance(kv_cache["k"], PositArray)
+                and jnp.issubdtype(kv_cache["k"].dtype, jnp.integer)):
+            legacy_cfg = policy.kv_cache
+        new_cache = append_kv(kv_cache, k, v, legacy_cfg)
+        # pass the buffers as-is (PositArray pages stay posit): chunks
+        # decode in-scan, with the format read off the pages themselves
         k, v = new_cache["k"], new_cache["v"]
         kv_len = new_cache["length"]
-        cfg_kv = policy.kv_cache
     else:
         q_offset = k.shape[2] - S
 
     out = blockwise_attention(q, k, v, n_kv=n_kv, causal=causal,
                               q_offset=q_offset, window=window,
-                              softcap=softcap, kv_len=kv_len, cfg_kv=cfg_kv)
+                              softcap=softcap, kv_len=kv_len,
+                              cfg_kv=legacy_cfg)
     out = out.transpose(0, 2, 1, 3).reshape(B, S, n_heads * head_dim)
     return linear(out, p["wo"], policy), new_cache
 
@@ -339,8 +356,12 @@ def init_embedding(key, vocab: int, d_model: int) -> Params:
 
 def embed(tokens, p: Params, policy: PositPolicy):
     t = p["table"]
+    if isinstance(t, PositArray):
+        # Light-PPU use case [9]: posit storage of tables, decode after
+        # gather — the table knows its own format
+        return t[tokens].to_f32()
     if t.dtype in (jnp.int8, jnp.int16):
-        # Light-PPU use case [9]: posit storage of tables, decode after gather
+        # deprecated shim: raw posit bits + policy-threaded format
         from repro.core.decode import decode_to_f32
         rows = jnp.take(t, tokens, axis=0)
         return decode_to_f32(rows, policy.weights)
@@ -351,7 +372,9 @@ def embed(tokens, p: Params, policy: PositPolicy):
 
 def unembed(h, p: Params, policy: PositPolicy):
     t = p["table"]
-    if t.dtype in (jnp.int8, jnp.int16):
+    if isinstance(t, PositArray):
+        t = t.to_f32()
+    elif t.dtype in (jnp.int8, jnp.int16):
         from repro.core.decode import decode_to_f32
         t = decode_to_f32(t, policy.weights)
     elif policy is not None and policy.weights is not None:

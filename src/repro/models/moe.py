@@ -39,6 +39,9 @@ def init_moe(key, d_model: int, d_ff: int, n_experts: int, act: str) -> Params:
 
 
 def _maybe_decode(w, policy: PositPolicy):
+    from repro.core.array import PositArray
+    if isinstance(w, PositArray):
+        return w.to_f32()
     if w.dtype in (jnp.int8, jnp.int16):
         from repro.core.decode import decode_to_f32
         return decode_to_f32(w, policy.weights)

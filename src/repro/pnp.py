@@ -1,0 +1,283 @@
+"""`repro.pnp` — numpy-style namespace over first-class posit arrays.
+
+The public, cfg-threading-free API of the reproduction:
+
+    import repro.pnp as pnp
+    from repro.core import P16_2
+
+    a = pnp.asarray([1.25, -0.375], P16_2)     # PFCVT: f32 -> posit
+    b = pnp.ones((2,), P16_2)
+    c = a + b                                  # PADD, format from the array
+    d = pnp.fma(a, b, c)                       # PFMADD, one rounding
+    m = pnp.matmul(A, B)                       # quire-semantics GEMM
+    f = c.to_f32()                             # PFCVT.S back to float
+
+Every function accepts `PositArray` operands and dispatches through
+`repro.kernels.ops`, so `use_pallas()` routing (TPU Pallas kernels vs the
+pure-jnp reference path) is invisible here.  Python scalars and float
+arrays mix in as *values* (correctly rounded into the posit operand's
+format); combining two different posit formats raises
+`PositConfigMismatchError` — cast explicitly with `.astype()`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.array import (PositArray, PositConfigMismatchError, is_posit,
+                              result_cfg)
+from repro.core.types import (P8_0, P8_2, P16_1, P16_2, P32_2, STANDARD,
+                              PositConfig)
+from repro.quant.policy import posit_cast_ste as ste  # noqa: F401  (jax.grad boundary)
+
+__all__ = [
+    "PositArray", "PositConfig", "PositConfigMismatchError", "is_posit",
+    "P8_0", "P8_2", "P16_1", "P16_2", "P32_2", "STANDARD",
+    "asarray", "frombits", "zeros", "ones", "full", "zeros_like",
+    "ones_like", "full_like", "add", "subtract", "multiply", "divide",
+    "fma", "reciprocal", "negative", "absolute", "abs", "sign", "where",
+    "matmul", "dot", "equal", "not_equal", "less", "less_equal", "greater",
+    "greater_equal", "pack", "unpack", "lanes", "ste",
+    "to_float32", "to_bfloat16", "astype",
+]
+
+
+# --------------------------------------------------------------------------
+# construction
+# --------------------------------------------------------------------------
+def asarray(x, cfg: PositConfig | None = None) -> PositArray:
+    """Values -> PositArray (correctly-rounded encode; PFCVT direction).
+
+    A PositArray input passes through unchanged (cfg, if given, must match —
+    use `.astype()` for format conversion).  Int *arrays* are rejected as
+    ambiguous; wrap payload bits with `frombits`.
+    """
+    if isinstance(x, PositArray):
+        if cfg is not None and cfg != x.cfg:
+            raise PositConfigMismatchError(
+                f"asarray cannot silently convert {x.cfg} -> {cfg}; use "
+                f".astype()")
+        return x
+    if cfg is None:
+        raise TypeError("asarray needs a cfg when given plain values")
+    v = jnp.asarray(x)
+    if jnp.issubdtype(v.dtype, jnp.integer) and v.ndim > 0:
+        raise TypeError("int arrays are ambiguous (values vs payload bits): "
+                        "use pnp.frombits(bits, cfg) for payloads or cast to "
+                        "float for values")
+    from repro.kernels import ops as kops
+    return PositArray(kops.encode(v.astype(jnp.float32), cfg), cfg)
+
+
+def frombits(bits, cfg: PositConfig) -> PositArray:
+    """Wrap existing posit payload ints (no conversion of the bits)."""
+    import jax as _jax
+    b = jnp.asarray(bits)
+    if not jnp.issubdtype(b.dtype, jnp.integer):
+        raise TypeError(f"frombits takes payload ints, got {b.dtype}; "
+                        f"encode values with pnp.asarray(x, cfg)")
+    if not isinstance(b, _jax.core.Tracer) and b.size:
+        lo, hi = int(b.min()), int(b.max())
+        if lo < -cfg.sign_bit or hi > cfg.mask:
+            raise ValueError(
+                f"payload {lo}..{hi} outside the {cfg.n}-bit pattern range "
+                f"[-{cfg.sign_bit}, {cfg.mask}] — narrowing would wrap")
+    return PositArray(b.astype(jnp.dtype(cfg.storage_dtype_name)), cfg)
+
+
+def zeros(shape, cfg: PositConfig) -> PositArray:
+    return PositArray(jnp.zeros(shape, jnp.dtype(cfg.storage_dtype_name)),
+                      cfg)
+
+
+def ones(shape, cfg: PositConfig) -> PositArray:
+    one = jnp.asarray(cfg.one_bits, jnp.dtype(cfg.storage_dtype_name))
+    return PositArray(jnp.full(shape, one), cfg)
+
+
+def full(shape, value, cfg: PositConfig) -> PositArray:
+    from repro.kernels import ops as kops
+    bits = kops.encode(jnp.full(shape, value, jnp.float32), cfg)
+    return PositArray(bits, cfg)
+
+
+def zeros_like(a: PositArray) -> PositArray:
+    return zeros(a.shape, a.cfg)
+
+
+def ones_like(a: PositArray) -> PositArray:
+    return ones(a.shape, a.cfg)
+
+
+def full_like(a: PositArray, value) -> PositArray:
+    return full(a.shape, value, a.cfg)
+
+
+# --------------------------------------------------------------------------
+# conversions (PFCVT both directions + format re-round)
+# --------------------------------------------------------------------------
+def to_float32(a: PositArray) -> jnp.ndarray:
+    return a.to_f32()
+
+
+def to_bfloat16(a: PositArray) -> jnp.ndarray:
+    return a.to_bf16()
+
+
+def astype(a: PositArray, cfg: PositConfig) -> PositArray:
+    return a.astype(cfg)
+
+
+# --------------------------------------------------------------------------
+# arithmetic (PADD/PSUB/PMUL/PDIV/PFMADD + inversion, §VI)
+# --------------------------------------------------------------------------
+def _pa(x, cfg: PositConfig) -> PositArray:
+    return x if isinstance(x, PositArray) else asarray(x, cfg)
+
+
+def add(a, b, cfg: PositConfig | None = None) -> PositArray:
+    cfg = result_cfg(a, b, cfg=cfg)
+    return _pa(a, cfg) + _pa(b, cfg)
+
+
+def subtract(a, b, cfg: PositConfig | None = None) -> PositArray:
+    cfg = result_cfg(a, b, cfg=cfg)
+    return _pa(a, cfg) - _pa(b, cfg)
+
+
+def multiply(a, b, cfg: PositConfig | None = None) -> PositArray:
+    cfg = result_cfg(a, b, cfg=cfg)
+    return _pa(a, cfg) * _pa(b, cfg)
+
+
+def divide(a, b, cfg: PositConfig | None = None, *,
+           mode: str = "poly_corrected", nr_rounds: int = 1) -> PositArray:
+    """PDIV; mode in {"exact", "poly", "poly_corrected", "pacogen"}."""
+    cfg = result_cfg(a, b, cfg=cfg)
+    from repro.kernels import ops as kops
+    a, b = _pa(a, cfg), _pa(b, cfg)
+    return PositArray(kops.divide(a.bits, b.bits, cfg=cfg, mode=mode,
+                                  nr_rounds=nr_rounds), cfg)
+
+
+def fma(a, b, c, cfg: PositConfig | None = None) -> PositArray:
+    """round(a*b + c) with a single rounding (PFMADD)."""
+    cfg = result_cfg(a, b, c, cfg=cfg)
+    from repro.kernels import ops as kops
+    a, b, c = _pa(a, cfg), _pa(b, cfg), _pa(c, cfg)
+    return PositArray(kops.elementwise("fma", a.bits, b.bits, c.bits,
+                                       cfg=cfg), cfg)
+
+
+def reciprocal(a: PositArray, *, mode: str = "poly_corrected") -> PositArray:
+    """1/a (the FPPU inversion op)."""
+    return divide(ones_like(a), a, mode=mode)
+
+
+def negative(a: PositArray) -> PositArray:
+    return -a
+
+
+def absolute(a: PositArray) -> PositArray:
+    return a.__abs__()
+
+
+abs = absolute  # noqa: A001  (numpy-style name)
+
+
+def sign(a: PositArray) -> PositArray:
+    """-1 / 0 / +1 / NaR, as posits of a's format."""
+    cfg = a.cfg
+    u = jnp.asarray(a.bits).astype(jnp.int32) & cfg.mask
+    one = cfg.one_bits
+    neg = (u >> (cfg.n - 1)) & 1
+    out = jnp.where(u == 0, 0, jnp.where(neg == 1, (-one) & cfg.mask, one))
+    out = jnp.where(u == cfg.nar, cfg.nar, out)
+    from repro.core.encode import to_storage
+    return PositArray(to_storage(out, cfg), cfg)
+
+
+def where(mask, a, b, cfg: PositConfig | None = None) -> PositArray:
+    """Elementwise select; both branches must share one posit format."""
+    cfg = result_cfg(a, b, cfg=cfg)
+    a, b = _pa(a, cfg), _pa(b, cfg)
+    return PositArray(jnp.where(mask, a.bits, b.bits), cfg)
+
+
+# --------------------------------------------------------------------------
+# linear algebra (quire semantics: one rounding per reduction)
+# --------------------------------------------------------------------------
+def matmul(a: PositArray, b: PositArray, *, out_posit: bool = True):
+    """[m,k] @ [k,n] with quire (single-rounding) accumulation.
+
+    out_posit=False returns the raw f32 accumulator (the pw-GEMM serving
+    path).
+    """
+    cfg = result_cfg(a, b)
+    from repro.kernels import ops as kops
+    out = kops.gemm(_pa(a, cfg).bits, _pa(b, cfg).bits, cfg_a=cfg, cfg_b=cfg,
+                    cfg_out=cfg if out_posit else None, out_posit=out_posit)
+    return PositArray(out, cfg) if out_posit else out
+
+
+def dot(a: PositArray, b: PositArray, *, out_posit: bool = True):
+    """Fused dot product over the last axis (quire semantics)."""
+    cfg = result_cfg(a, b)
+    from repro.core.quire import quire_dot
+    out = quire_dot(_pa(a, cfg).bits, _pa(b, cfg).bits, cfg,
+                    out_posit=out_posit)
+    return PositArray(out, cfg) if out_posit else out
+
+
+# --------------------------------------------------------------------------
+# comparisons (free: patterns compare as 2's-complement ints, §VIII)
+# --------------------------------------------------------------------------
+def equal(a, b):
+    return _cmp(a, b, "__eq__")
+
+
+def not_equal(a, b):
+    return _cmp(a, b, "__ne__")
+
+
+def less(a, b):
+    return _cmp(a, b, "__lt__")
+
+
+def less_equal(a, b):
+    return _cmp(a, b, "__le__")
+
+
+def greater(a, b):
+    return _cmp(a, b, "__gt__")
+
+
+def greater_equal(a, b):
+    return _cmp(a, b, "__ge__")
+
+
+def _cmp(a, b, dunder):
+    cfg = result_cfg(a, b)
+    return getattr(_pa(a, cfg), dunder)(_pa(b, cfg))
+
+
+# --------------------------------------------------------------------------
+# SIMD packed-word views (paper §VIII-A, C4)
+# --------------------------------------------------------------------------
+def lanes(a_or_cfg) -> int:
+    """SIMD lanes per 32-bit word: 4 for posit8, 2 for posit16."""
+    from repro.core.packing import lanes as _lanes
+    cfg = a_or_cfg.cfg if isinstance(a_or_cfg, PositArray) else a_or_cfg
+    return _lanes(cfg)
+
+
+def pack(a: PositArray) -> jnp.ndarray:
+    """[..., L*k] PositArray -> [..., k] int32 packed words (lane 0 in the
+    LSBs, the paper's register convention)."""
+    from repro.core.packing import pack_words
+    return pack_words(a.bits, a.cfg)
+
+
+def unpack(words, cfg: PositConfig) -> PositArray:
+    """[..., k] int32 packed words -> [..., k*L] PositArray."""
+    from repro.core.packing import unpack_words
+    return PositArray(unpack_words(words, cfg), cfg)

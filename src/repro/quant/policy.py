@@ -23,6 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.array import PositArray
 from repro.core.convert import f32_to_posit
 from repro.core.decode import decode_to_f32
 from repro.core.types import PositConfig
@@ -68,12 +69,14 @@ posit_cast_ste.defvjp(_ste_fwd, _ste_bwd)
 
 
 def quantize_tree(params, cfg: PositConfig, predicate=None):
-    """Post-training quantization: f32 param pytree -> posit storage ints.
+    """Post-training quantization: f32 param pytree -> PositArray leaves.
 
     predicate(path_str, leaf) -> bool selects which leaves quantize
     (default: every float array with >= 2 dims — matrices/tables, not
     norm scales or biases, matching the paper's DNN experiments which keep
-    normalization in high precision).
+    normalization in high precision).  Quantized leaves come back as
+    `PositArray` (format bound to the payload), so downstream code needs no
+    `cfg` threading.
     """
     flat = jax.tree_util.tree_flatten_with_path(params)
     leaves, treedef = flat
@@ -86,15 +89,26 @@ def quantize_tree(params, cfg: PositConfig, predicate=None):
     out = []
     for path, leaf in leaves:
         p = jax.tree_util.keystr(path)
-        out.append(f32_to_posit(leaf.astype(jnp.float32), cfg)
+        out.append(PositArray(f32_to_posit(leaf.astype(jnp.float32), cfg), cfg)
                    if pred(p, leaf) else leaf)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def dequantize_tree(params, cfg: PositConfig):
-    """Inverse of quantize_tree (int leaves -> f32)."""
+def dequantize_tree(params, cfg: PositConfig | None = None):
+    """Inverse of quantize_tree: PositArray leaves -> f32.
+
+    `cfg` is only consulted for legacy trees holding raw storage-int leaves
+    (the pre-PositArray convention, kept as a deprecated shim).
+    """
     def deq(x):
+        if isinstance(x, PositArray):
+            return x.to_f32()
         if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.integer):
+            if cfg is None:
+                raise TypeError("raw int leaf in dequantize_tree without a "
+                                "cfg; quantize with quantize_tree to get "
+                                "PositArray leaves")
             return decode_to_f32(x, cfg)
         return x
-    return jax.tree_util.tree_map(deq, params)
+    return jax.tree_util.tree_map(
+        deq, params, is_leaf=lambda x: isinstance(x, PositArray))

@@ -12,6 +12,7 @@ import re
 import jax
 import jax.numpy as jnp
 
+from repro.core.array import PositArray
 from repro.core.convert import f32_to_posit
 from repro.core.types import PositConfig
 
@@ -37,23 +38,30 @@ def is_quantizable(path_str: str) -> bool:
 
 
 def quantize_for_serving(params, cfg: PositConfig):
-    """f32 param pytree -> posit storage ints on the quantizable leaves."""
+    """f32 param pytree -> PositArray on the quantizable leaves.
+
+    The format rides with each quantized leaf, so the serving stack
+    (models/blocks.py `linear`, `embed`, `unembed`) consumes the weights
+    with no cfg threading.
+    """
     def q(path, leaf):
         if (is_quantizable(_path_str(path))
                 and jnp.issubdtype(leaf.dtype, jnp.floating)):
-            return f32_to_posit(leaf.astype(jnp.float32), cfg)
+            return PositArray(f32_to_posit(leaf.astype(jnp.float32), cfg),
+                              cfg)
         return leaf
     return jax.tree_util.tree_map_with_path(q, params)
 
 
 def serving_param_specs(param_shapes, cfg: PositConfig):
-    """ShapeDtypeStruct tree -> same tree with posit int dtypes on
-    quantizable leaves (for AOT lowering without materializing weights)."""
-    dt = jnp.dtype(f"int{cfg.storage_bits}")
+    """ShapeDtypeStruct tree -> same tree with PositArray-wrapped posit int
+    specs on quantizable leaves (for AOT lowering without materializing
+    weights — PositArray is a pytree, so abstract leaves pass through)."""
+    dt = jnp.dtype(cfg.storage_dtype_name)
 
     def q(path, leaf):
         if (is_quantizable(_path_str(path))
                 and jnp.issubdtype(leaf.dtype, jnp.floating)):
-            return jax.ShapeDtypeStruct(leaf.shape, dt)
+            return PositArray(jax.ShapeDtypeStruct(leaf.shape, dt), cfg)
         return leaf
     return jax.tree_util.tree_map_with_path(q, param_shapes)

@@ -1,8 +1,10 @@
 """KV cache with optional posit storage (the serving-side posit win).
 
 Decode is HBM-bound on KV reads; posit16 halves and posit8 quarters those
-bytes vs f32 (paper C4 applied to serving).  The cache stores posit payload
-ints; decode happens at attention time (fused into the Pallas kernel on TPU,
+bytes vs f32 (paper C4 applied to serving).  Posit caches hold `PositArray`
+buffers — the format is bound to the pages at `init_cache` time (like the
+FPPU register file) and every later call infers it from the cache itself;
+decode happens at attention time (fused into the Pallas kernel on TPU,
 explicit decode on the jnp path — either way HBM sees only narrow ints).
 """
 from __future__ import annotations
@@ -10,6 +12,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.array import PositArray, PositConfigMismatchError
 from repro.core.convert import f32_to_posit
 from repro.core.decode import decode_to_f32
 from repro.core.types import PositConfig
@@ -17,20 +20,40 @@ from repro.core.types import PositConfig
 
 def init_cache(batch: int, n_kv: int, max_len: int, head_dim: int,
                cfg: PositConfig | None, dtype=jnp.float32):
-    if cfg is not None:
-        buf_dtype = jnp.dtype(f"int{cfg.storage_bits}")
-    else:
-        buf_dtype = dtype
+    """Empty cache.  cfg set -> PositArray pages; None -> float pages."""
     shape = (batch, n_kv, max_len, head_dim)
-    return {
-        "k": jnp.zeros(shape, buf_dtype),
-        "v": jnp.zeros(shape, buf_dtype),
-        "length": jnp.zeros((), jnp.int32),
-    }
+    if cfg is not None:
+        dt = jnp.dtype(cfg.storage_dtype_name)
+        k = PositArray(jnp.zeros(shape, dt), cfg)
+        v = PositArray(jnp.zeros(shape, dt), cfg)
+    else:
+        k = jnp.zeros(shape, dtype)
+        v = jnp.zeros(shape, dtype)
+    return {"k": k, "v": v, "length": jnp.zeros((), jnp.int32)}
 
 
-def append_kv(cache, k, v, cfg: PositConfig | None):
+def _cache_cfg(cache, cfg: PositConfig | None) -> PositConfig | None:
+    """The cache's bound format; a legacy explicit cfg must agree."""
+    buf = cache["k"]
+    if isinstance(buf, PositArray):
+        if cfg is not None and cfg != buf.cfg:
+            raise PositConfigMismatchError(
+                f"explicit cfg {cfg} contradicts cache format {buf.cfg}")
+        return buf.cfg
+    if cfg is None and jnp.issubdtype(buf.dtype, jnp.integer):
+        # an int-buffer cache without a format would silently truncate the
+        # appended floats; refuse instead of corrupting
+        raise TypeError("raw int KV buffers need an explicit cfg (deprecated"
+                        " shim) — or build the cache with init_cache(...,"
+                        " cfg) to get PositArray pages")
+    return cfg  # legacy raw-int cache (deprecated shim) or float cache
+
+
+def append_kv(cache, k, v, cfg: PositConfig | None = None):
     """k, v: [B, n_kv, S, head_dim] float.  Writes at cache['length'].
+
+    The storage format comes from the cache buffers themselves; the `cfg`
+    argument remains only as a deprecated shim for legacy raw-int caches.
 
     Decode-sized appends (S_new << S_max) use a masked elementwise write
     instead of dynamic_update_slice: a DUS at a *traced* index on a sharded
@@ -38,20 +61,24 @@ def append_kv(cache, k, v, cfg: PositConfig | None):
     rematerialization); where()+iota stays fully sharded.  Prefill-sized
     appends start at 0 with a static extent, where DUS is sharding-safe.
     """
+    cfg = _cache_cfg(cache, cfg)
+    posit_pages = isinstance(cache["k"], PositArray)
+    kbuf = cache["k"].bits if posit_pages else cache["k"]
+    vbuf = cache["v"].bits if posit_pages else cache["v"]
     if cfg is not None:
         k = f32_to_posit(k.astype(jnp.float32), cfg)
         v = f32_to_posit(v.astype(jnp.float32), cfg)
     else:
-        k = k.astype(cache["k"].dtype)
-        v = v.astype(cache["v"].dtype)
+        k = k.astype(kbuf.dtype)
+        v = v.astype(vbuf.dtype)
     start = cache["length"]
-    s_new, s_max = k.shape[2], cache["k"].shape[2]
+    s_new, s_max = k.shape[2], kbuf.shape[2]
 
     if s_new * 4 >= s_max:
         # prefill: static start (the cache is empty; length is 0 by
         # construction of the serving engine)
-        new_k = lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
-        new_v = lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+        new_k = lax.dynamic_update_slice(kbuf, k, (0, 0, 0, 0))
+        new_v = lax.dynamic_update_slice(vbuf, v, (0, 0, 0, 0))
     else:
         pos = jnp.arange(s_max)
         mask = (pos >= start) & (pos < start + s_new)
@@ -66,15 +93,22 @@ def append_kv(cache, k, v, cfg: PositConfig | None):
             def write(buf, new):
                 cand = jnp.take(new, idx, axis=2)
                 return jnp.where(mask[None, None, :, None], cand, buf)
-        new_k = write(cache["k"], k)
-        new_v = write(cache["v"], v)
+        new_k = write(kbuf, k)
+        new_v = write(vbuf, v)
+    if posit_pages:
+        new_k = PositArray(new_k, cfg)
+        new_v = PositArray(new_v, cfg)
     return {"k": new_k, "v": new_v, "length": start + s_new}
 
 
-def materialize_kv(cache, cfg: PositConfig | None, dtype=jnp.float32):
+def materialize_kv(cache, cfg: PositConfig | None = None, dtype=jnp.float32):
     """Full-buffer k, v as float (positions >= length are masked by the
-    attention's kv_len argument)."""
+    attention's kv_len argument).  Format comes from the cache; `cfg` is the
+    deprecated legacy-shim override."""
+    cfg = _cache_cfg(cache, cfg)
     k, v = cache["k"], cache["v"]
+    if isinstance(k, PositArray):
+        return k.to_f32().astype(dtype), v.to_f32().astype(dtype)
     if cfg is not None:
         k = decode_to_f32(k, cfg).astype(dtype)
         v = decode_to_f32(v, cfg).astype(dtype)

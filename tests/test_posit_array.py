@@ -1,0 +1,366 @@
+"""First-class PositArray + repro.pnp: equivalence with the functional ops,
+mixed-format safety, pytree transparency, and old-shim parity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.pnp as pnp
+from repro.core import (P8_2, P16_2, PositArray, PositConfigMismatchError,
+                        padd, pdiv, pfma, pmul, pneg, pabs, precip, psub,
+                        quire_dot, quire_matmul)
+from repro.core.types import PositConfig
+
+
+@pytest.fixture()
+def rng():
+    """Module-local, function-scoped rng: keeps this file's draws out of the
+    session-scoped stream other test files consume (their sampled-input
+    tests are order-sensitive via the shared fixture)."""
+    return np.random.default_rng(1234)
+
+
+def _all_p8_pairs():
+    bits = np.arange(256)
+    A, B = np.meshgrid(bits, bits)
+    return (jnp.asarray(A.ravel(), jnp.int8), jnp.asarray(B.ravel(), jnp.int8))
+
+
+# --------------------------------------------------------------------------
+# operator overloading is bit-identical to the functional intrinsics
+# --------------------------------------------------------------------------
+def test_operators_bit_identical_exhaustive_p8():
+    cfg = P8_2
+    ab, bb = _all_p8_pairs()
+    a, b = pnp.frombits(ab, cfg), pnp.frombits(bb, cfg)
+    m = cfg.mask
+
+    def raw(x):
+        return np.asarray(x.bits).astype(np.int64) & m
+
+    def ref(x):
+        return np.asarray(x).astype(np.int64) & m
+
+    assert (raw(a + b) == ref(padd(ab, bb, cfg))).all()
+    assert (raw(a - b) == ref(psub(ab, bb, cfg))).all()
+    assert (raw(a * b) == ref(pmul(ab, bb, cfg))).all()
+    assert (raw(a / b) == ref(pdiv(ab, bb, cfg))).all()
+    assert (raw(-a) == ref(pneg(ab, cfg))).all()
+    assert (raw(abs(a)) == ref(pabs(ab, cfg))).all()
+    assert (raw(pnp.fma(a, b, a)) == ref(pfma(ab, bb, ab, cfg))).all()
+    assert (raw(pnp.reciprocal(a)) == ref(precip(ab, cfg))).all()
+
+
+def test_matmul_bit_identical_to_quire(rng):
+    for cfg, dt in ((P8_2, jnp.int8), (P16_2, jnp.int16)):
+        ab = jnp.asarray(rng.integers(-(1 << (cfg.n - 1)) + 1,
+                                      1 << (cfg.n - 1), (16, 24)), dt)
+        bb = jnp.asarray(rng.integers(-(1 << (cfg.n - 1)) + 1,
+                                      1 << (cfg.n - 1), (24, 8)), dt)
+        a, b = pnp.frombits(ab, cfg), pnp.frombits(bb, cfg)
+        got = np.asarray((a @ b).bits)
+        want = np.asarray(quire_matmul(ab, bb, cfg))
+        assert (got == want).all()
+        gd = np.asarray(pnp.dot(a[0], b[:, 0]).bits)
+        wd = np.asarray(quire_dot(ab[0], bb[:, 0], cfg))
+        assert (gd == wd).all()
+
+
+def test_comparisons_and_scalar_mixing(rng):
+    cfg = P16_2
+    a = pnp.asarray(rng.normal(size=(64,)).astype(np.float32), cfg)
+    b = pnp.asarray(rng.normal(size=(64,)).astype(np.float32), cfg)
+    lt = np.asarray(a < b)
+    assert (np.asarray(a >= b) == ~lt).all()
+    assert (np.asarray(pnp.equal(a, a))).all()
+    # scalars are values, correctly rounded into a's format
+    two_a = 2.0 * a
+    want = pmul(pnp.asarray(2.0, cfg).bits, a.bits, cfg)
+    assert (np.asarray(two_a.bits) == np.asarray(want)).all()
+    # 1 - a == psub(one, a)
+    one = pnp.ones_like(a)
+    assert (np.asarray((1 - a).bits)
+            == np.asarray((one - a).bits)).all()
+
+
+# --------------------------------------------------------------------------
+# mixed-format safety: loud errors, no silent reinterpretation
+# --------------------------------------------------------------------------
+def test_config_mismatch_raises():
+    a = pnp.asarray(1.5, P16_2)
+    b = pnp.asarray(1.5, P8_2)
+    for fn in (lambda: a + b, lambda: a * b, lambda: a / b,
+               lambda: a < b, lambda: pnp.fma(a, b, a),
+               lambda: pnp.where(True, a, b)):
+        with pytest.raises(PositConfigMismatchError):
+            fn()
+    with pytest.raises(PositConfigMismatchError):
+        pnp.asarray(a, P8_2)
+    # but the explicit cast works and is exact (widening)
+    assert float(b.astype(P16_2).to_f32()) == float(b.to_f32())
+
+
+def test_int_arrays_rejected_as_ambiguous():
+    a = pnp.asarray(1.5, P16_2)
+    with pytest.raises(TypeError):
+        a + np.arange(3)
+    with pytest.raises(TypeError):
+        pnp.asarray(np.arange(3), P16_2)
+    # payload ints go through the explicit constructor
+    assert pnp.frombits(np.arange(3, dtype=np.int16), P16_2).shape == (3,)
+    # ...which refuses float "bits" and out-of-range payloads
+    with pytest.raises(TypeError):
+        pnp.frombits(np.array([1.5, 2.0], np.float32), P16_2)
+    with pytest.raises(ValueError):
+        pnp.frombits(np.arange(300), P8_2)     # would wrap in int8
+
+
+def test_scalar_broadcast_through_dispatch(rng):
+    """Scalar / broadcast operands must be expanded at the dispatch layer
+    (the Pallas path tiles inputs independently and cannot broadcast)."""
+    from repro.kernels import ops as kops
+    cfg = P16_2
+    a = pnp.asarray(rng.normal(size=(8, 64)).astype(np.float32), cfg)
+    two = pnp.asarray(2.0, cfg)
+    out = kops.elementwise("mul", a, two)
+    assert out.shape == (8, 64)
+    np.testing.assert_array_equal(np.asarray(out.bits),
+                                  np.asarray((a * 2.0).bits))
+    rev = two - a                               # scalar on the left
+    assert rev.shape == (8, 64)
+    row = pnp.asarray(rng.normal(size=(64,)).astype(np.float32), cfg)
+    got = kops.divide(a, row)                   # (8,64) / (64,) broadcast
+    assert got.shape == (8, 64)
+    # gemm with cfg-less raw ints (old silent-garbage path) now refuses
+    with pytest.raises(TypeError):
+        kops.gemm(a.bits[:4, :4], a.bits[:4, :4])
+
+
+# --------------------------------------------------------------------------
+# pytree transparency: jit / vmap / grad(STE)
+# --------------------------------------------------------------------------
+def test_pytree_roundtrip_and_jit_vmap(rng):
+    cfg = P16_2
+    a = pnp.asarray(rng.normal(size=(8, 16)).astype(np.float32), cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(a)
+    assert len(leaves) == 1 and leaves[0].dtype == jnp.int16
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, PositArray) and back.cfg == cfg
+
+    b = pnp.asarray(rng.normal(size=(8, 16)).astype(np.float32), cfg)
+    eager = a + b
+    jitted = jax.jit(lambda x, y: x + y)(a, b)
+    assert isinstance(jitted, PositArray) and jitted.cfg == cfg
+    assert (np.asarray(jitted.bits) == np.asarray(eager.bits)).all()
+
+    vm = jax.vmap(lambda x, y: x * y)(a, b)
+    assert (np.asarray(vm.bits) == np.asarray((a * b).bits)).all()
+
+    # PositArray nested inside dict pytrees (the params/caches convention)
+    tree = {"w": a, "scale": jnp.ones(())}
+    out = jax.jit(lambda t: t["w"] + t["w"])(tree)
+    assert isinstance(out, PositArray)
+
+
+def test_grad_via_ste_cast(rng):
+    w = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
+    g = jax.grad(lambda x: (pnp.ste(x, P16_2) ** 2).sum())(w)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(pnp.ste(w, P16_2)),
+                               rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# namespace coverage: constructors, where/sign, packing
+# --------------------------------------------------------------------------
+def test_constructors_and_where_sign(rng):
+    cfg = P8_2
+    z = pnp.zeros((3, 4), cfg)
+    assert (np.asarray(z.bits) == 0).all() and z.dtype == jnp.int8
+    o = pnp.ones((3, 4), cfg)
+    assert (np.asarray(o.to_f32()) == 1.0).all()
+    f = pnp.full((5,), -2.5, cfg)
+    assert np.allclose(np.asarray(f.to_f32()), -2.5)
+
+    a = pnp.asarray(rng.normal(size=(32,)).astype(np.float32), cfg)
+    w = pnp.where(a < 0.0, pnp.zeros_like(a), a)
+    assert (np.asarray(w.to_f32()) >= 0).all()
+
+    s = pnp.sign(a)
+    vf = np.asarray(a.to_f32())
+    np.testing.assert_array_equal(np.asarray(s.to_f32()), np.sign(vf))
+
+
+def test_pack_unpack_roundtrip(rng):
+    for cfg, dt in ((P8_2, np.int8), (P16_2, np.int16)):
+        a = pnp.frombits(
+            jnp.asarray(rng.integers(-(1 << (cfg.n - 1)), 1 << (cfg.n - 1),
+                                     (4, 32)), jnp.dtype(dt.__name__)), cfg)
+        w = pnp.pack(a)
+        assert w.dtype == jnp.int32
+        assert w.shape[-1] == 32 // pnp.lanes(cfg)
+        back = pnp.unpack(w, cfg)
+        assert (np.asarray(back.bits) == np.asarray(a.bits)).all()
+
+
+# --------------------------------------------------------------------------
+# deprecated shims: old functional signatures == new API
+# --------------------------------------------------------------------------
+def test_old_shims_match_new_api(rng):
+    from repro.kernels import ops as kops
+    cfg = P16_2
+    xb = jnp.asarray(rng.integers(-(1 << 15) + 1, 1 << 15, (6, 8)), jnp.int16)
+    yb = jnp.asarray(rng.integers(-(1 << 15) + 1, 1 << 15, (6, 8)), jnp.int16)
+    x, y = pnp.frombits(xb, cfg), pnp.frombits(yb, cfg)
+
+    # raw-bits + explicit cfg (old) vs PositArray (new)
+    old = kops.elementwise("add", xb, yb, cfg=cfg)
+    new = kops.elementwise("add", x, y)
+    assert isinstance(new, PositArray)
+    assert (np.asarray(old) == np.asarray(new.bits)).all()
+
+    old = kops.divide(xb, yb, cfg=cfg)
+    new = kops.divide(x, y)
+    assert (np.asarray(old) == np.asarray(new.bits)).all()
+
+    act = jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)
+    wb = jnp.asarray(rng.integers(-(1 << 15) + 1, 1 << 15, (6, 8)), jnp.int16)
+    old = kops.pw_matmul(act, wb, cfg)
+    new = kops.pw_matmul(act, pnp.frombits(wb, cfg))
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    mb = jnp.asarray(rng.integers(-(1 << 15) + 1, 1 << 15, (8, 5)), jnp.int16)
+    m = pnp.frombits(mb, cfg)
+    old = kops.gemm(xb, mb, cfg_a=cfg, cfg_b=cfg, cfg_out=cfg, out_posit=True)
+    new = kops.gemm(x, m, out_posit=True)
+    assert isinstance(new, PositArray)
+    assert (np.asarray(old) == np.asarray(new.bits)).all()
+
+    # explicit cfg contradicting the array's bound format is an error
+    with pytest.raises(ValueError):
+        kops.elementwise("add", x, y, cfg=P8_2)
+
+
+def test_kv_cache_positarray_pages(rng):
+    from repro.serving.kv_cache import append_kv, init_cache, materialize_kv
+    cfg = P16_2
+    cache = init_cache(2, 2, 16, 8, cfg)
+    assert isinstance(cache["k"], PositArray)
+    k = jnp.asarray(rng.normal(size=(2, 2, 4, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 4, 8)), jnp.float32)
+    cache = append_kv(cache, k, v)          # no cfg threading
+    assert isinstance(cache["k"], PositArray) and int(cache["length"]) == 4
+    kf, vf = materialize_kv(cache)
+    np.testing.assert_allclose(np.asarray(kf[:, :, :4]), np.asarray(k),
+                               rtol=0.01, atol=0.01)
+    # legacy float cache still works
+    fcache = init_cache(2, 2, 16, 8, None)
+    fcache = append_kv(fcache, k, v)
+    kf2, _ = materialize_kv(fcache)
+    np.testing.assert_array_equal(np.asarray(kf2[:, :, :4]), np.asarray(k))
+    # explicit cfg contradicting the page format is an error
+    with pytest.raises(ValueError):
+        append_kv(cache, k, v, P8_2)
+
+
+def test_numpy_left_operand_and_foreign_eq(rng):
+    cfg = P16_2
+    a = pnp.asarray(rng.normal(size=(4,)).astype(np.float32), cfg)
+    f = np.ones((4,), np.float32)
+    # numpy on the left must defer to our reflected ops (__array_ufunc__=None)
+    out = f + a
+    assert isinstance(out, PositArray)
+    want = pnp.asarray(f, cfg) + a
+    assert (np.asarray(out.bits) == np.asarray(want.bits)).all()
+    out = f * a
+    assert isinstance(out, PositArray)
+    # foreign types fall back to identity comparison instead of raising
+    assert (a == None) is False          # noqa: E711
+    assert (a != "x") is True
+    # ...but ambiguous int arrays stay loud even under == (no silent False)
+    with pytest.raises(TypeError):
+        a == a.bits                      # noqa: B015
+    # but mismatched posit formats still raise, even under ==
+    with pytest.raises(PositConfigMismatchError):
+        a == pnp.asarray(1.0, P8_2)      # noqa: B015
+
+
+def test_single_posit_kv_operand_rejected(rng):
+    from repro.kernels import ops as kops
+    from repro.models.blocks import blockwise_attention
+    q = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    vp = pnp.asarray(rng.normal(size=(2, 8, 16)).astype(np.float32), P16_2)
+    with pytest.raises(TypeError):
+        kops.attention(q, kf, vp)
+    qb = jnp.asarray(rng.normal(size=(1, 2, 4, 8)), jnp.float32)
+    kb = jnp.asarray(rng.normal(size=(1, 2, 4, 8)), jnp.float32)
+    vb = pnp.asarray(rng.normal(size=(1, 2, 4, 8)).astype(np.float32), P16_2)
+    with pytest.raises(TypeError):
+        blockwise_attention(qb, kb, vb, n_kv=2, causal=True)
+
+
+def test_float_payload_and_mixed_gemm_guards(rng):
+    from repro.kernels import ops as kops
+    cfg = P16_2
+    a = pnp.asarray(rng.normal(size=(4,)).astype(np.float32), cfg)
+    f = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+    # raw float companions would be consumed as bit patterns: refuse
+    with pytest.raises(TypeError):
+        kops.elementwise("add", a, f)
+    with pytest.raises(TypeError):
+        kops.divide(a, f)
+    # mixed-format gemm with posit output needs an explicit cfg_out
+    e8 = pnp.asarray(np.eye(4, dtype=np.float32), P8_2)
+    e16 = pnp.asarray(np.eye(4, dtype=np.float32), P16_2)
+    with pytest.raises(PositConfigMismatchError):
+        kops.gemm(e8, e16, out_posit=True)
+    out = kops.gemm(e8, e16, cfg_out=P16_2, out_posit=True)
+    assert isinstance(out, PositArray) and out.cfg == P16_2
+    # posit q is rejected at the boundary with a clear message
+    with pytest.raises(TypeError, match="q must be a float array"):
+        kops.attention(e16[None], f[None, :, None], f[None, :, None])
+    # int raw companions remain valid shims (same-format payload bits)
+    got = kops.elementwise("add", a, a.bits)
+    assert (np.asarray(got.bits) == np.asarray((a + a).bits)).all()
+    # python scalars (values) would be consumed as bit patterns: refuse
+    with pytest.raises(TypeError):
+        kops.elementwise("add", a, 1.5)
+    with pytest.raises(TypeError):
+        kops.elementwise("add", a, 7)
+    # gemm: cfg-less int companions of a posit operand are value-corruption
+    w16 = pnp.asarray(rng.normal(size=(4, 3)).astype(np.float32), cfg)
+    with pytest.raises(TypeError):
+        kops.gemm(a.reshape(1, 4).bits, w16)
+    # ...but float activations x posit weights (the pw path) stay legal
+    acts = jnp.asarray(rng.normal(size=(2, 4)), jnp.float32)
+    assert kops.gemm(acts, w16).shape == (2, 3)
+
+
+def test_legacy_raw_int_cache_shim(rng):
+    from repro.serving.kv_cache import append_kv, materialize_kv
+    cfg = P16_2
+    # pre-PositArray convention: raw int buffers + threaded cfg
+    legacy = {"k": jnp.zeros((1, 1, 8, 4), jnp.int16),
+              "v": jnp.zeros((1, 1, 8, 4), jnp.int16),
+              "length": jnp.zeros((), jnp.int32)}
+    k = jnp.asarray(rng.normal(size=(1, 1, 2, 4)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, 2, 4)), jnp.float32)
+    out = append_kv(legacy, k, v, cfg)
+    kf, _ = materialize_kv(out, cfg)
+    np.testing.assert_allclose(np.asarray(kf[:, :, :2]), np.asarray(k),
+                               rtol=0.01, atol=0.01)
+    # int buffers with no format must refuse, not truncate silently
+    with pytest.raises(TypeError):
+        append_kv(legacy, k, v)
+
+
+def test_quantize_trees_produce_posit_arrays(rng):
+    from repro.quant.policy import dequantize_tree, quantize_tree
+    params = {"w": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32),
+              "scale": jnp.ones((8,), jnp.float32)}
+    q = quantize_tree(params, P16_2)
+    assert isinstance(q["w"], PositArray) and q["w"].cfg == P16_2
+    assert q["scale"].dtype == jnp.float32      # 1-D leaves stay float
+    d = dequantize_tree(q)                      # no cfg needed
+    np.testing.assert_allclose(np.asarray(d["w"]), np.asarray(params["w"]),
+                               rtol=2e-3, atol=2e-3)

@@ -1,7 +1,13 @@
 """Hypothesis property-based tests for posit arithmetic invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
+
+# property sweeps run hundreds of eager-dispatch examples per test: nightly
+pytestmark = pytest.mark.slow
 
 from repro.core import golden as G
 from repro.core import ops as O

@@ -1,0 +1,201 @@
+"""Paged continuous-batching vs dense synchronized serving throughput.
+
+The serving claim of the paper's C4/C6 (posit KV halves/quarters HBM bytes)
+only turns into tokens/sec if the engine keeps slots busy: the dense engine
+pads every prompt in a batch to the batch max and holds every slot until
+the whole batch drains, so mixed-length traffic wastes most of its FLOPs on
+padding.  The paged engine (serving.engine.PagedServingEngine) chunk-
+prefills each prompt at its true length, buckets the page-table width to
+the active maximum, and backfills freed slots immediately.
+
+Workload: `n_req` requests, prompt lengths log-uniform in [min_len,
+max_len], fixed max_new, greedy sampling, identical model/PTQ weights for
+both engines.  Reported: end-to-end generated tokens/sec (excluding
+compile, via a warmup pass) and the paged/dense speedup.
+
+    PYTHONPATH=src python -m benchmarks.serving_decode [--smoke]
+
+Writes experiments/BENCH_serving.json (the nightly CI artifact tracking
+the perf trajectory PR-over-PR).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "BENCH_serving.json")
+
+
+def make_workload(n_req: int, min_len: int, max_len: int, min_new: int,
+                  max_new: int, vocab: int, seed: int = 0):
+    """Mixed traffic: prompt lengths log-uniform in [min_len, max_len] AND
+    per-request output budgets uniform in [min_new, max_new] — real requests
+    finish at different times, which is the load continuous batching
+    exists for (a synchronized batch decodes until its slowest request)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    lo, hi = np.log(min_len), np.log(max_len)
+    reqs = []
+    for i in range(n_req):
+        plen = int(round(np.exp(rng.uniform(lo, hi))))
+        plen = max(min_len, min(max_len, plen))
+        new = int(rng.integers(min_new, max_new + 1))
+        reqs.append((rng.integers(0, vocab, plen).astype(np.int32), new))
+    return reqs
+
+
+def _bench_model(d_model=64, n_layers=2, vocab=256, posit="p16"):
+    import jax
+    from repro.core.types import P8_2, P16_2
+    from repro.models.transformer import ModelConfig, init_params
+    from repro.quant.policy import PositPolicy
+    pcfg = {"p8": P8_2, "p16": P16_2, "off": None}[posit]
+    cfg = ModelConfig(name=f"bench-serve-{posit}", n_layers=n_layers,
+                      d_model=d_model, n_heads=4, n_kv=2, d_ff=2 * d_model,
+                      vocab=vocab, policy=PositPolicy(kv_cache=pcfg))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def run_dense(params, cfg, reqs, batch: int, max_new: int, cap: int,
+              snug: bool = False) -> float:
+    """The synchronized dense engine, two flavors:
+
+    snug=False: fixed rectangular [batch, cap] prompts and a max-capacity
+        KV buffer (a dense cache is sized for the longest request before
+        lengths are known; one compiled step for the whole run) — the
+        deployed dense engine.
+    snug=True: pad each FIFO batch only to *its* max prompt and size the
+        cache to match (one retrace per distinct batch shape) — a stronger
+        baseline that gives the dense engine per-batch length knowledge.
+
+    Prompts are left-padded so the last position is real.  Returns seconds.
+    """
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.serving.engine import generate
+    t0 = time.time()
+    for lo in range(0, len(reqs), batch):
+        chunk = reqs[lo:lo + batch]
+        width = max(len(p) for p, _ in chunk) if snug else cap
+        # synchronized batch: every slot decodes until the batch's slowest
+        # request is done (per-request budgets can't stop a dense batch)
+        new = max(m for _, m in chunk)
+        toks = np.zeros((batch, width), np.int32)
+        for i, (p, _) in enumerate(chunk):
+            toks[i, width - len(p):] = p
+        out = generate(params, cfg, jnp.asarray(toks), new,
+                       max_len=width + max_new)
+        out.block_until_ready()
+    return time.time() - t0
+
+
+def run_paged(params, cfg, reqs, batch: int, page_size: int,
+              table_width: int, prefill_chunk: int) -> float:
+    from repro.serving.engine import PagedServingEngine
+    eng = PagedServingEngine(params, cfg, max_seqs=batch,
+                             page_size=page_size, table_width=table_width,
+                             prefill_chunk=prefill_chunk)
+    t0 = time.time()
+    eng.run(list(reqs))
+    return time.time() - t0
+
+
+def bench(smoke: bool = False, posit: str = "p16",
+          uniform_new: bool = False) -> dict:
+    """One workload measurement.  uniform_new=True fixes every request's
+    output budget (the ISSUE-2 acceptance row: only *prompt lengths* are
+    mixed); False also mixes per-request budgets, which lets the
+    synchronized baselines finish early batches and is the harder
+    comparison."""
+    if smoke:
+        n_req, min_len, max_len, batch = 12, 64, 512, 8
+        min_new, max_new = (12, 12) if uniform_new else (4, 16)
+        page_size, prefill_chunk = 32, 128
+    else:
+        n_req, min_len, max_len, batch = 24, 128, 4096, 8
+        min_new, max_new = (32, 32) if uniform_new else (8, 64)
+        page_size, prefill_chunk = 64, 512
+    params, cfg = _bench_model(posit=posit)
+    reqs = make_workload(n_req, min_len, max_len, min_new, max_new,
+                         cfg.vocab)
+    table_width = -(-(max_len + max_new) // page_size)
+    # tokens/sec counts *requested* tokens only: the synchronized engines
+    # keep decoding finished slots until the batch's slowest request, and
+    # that overhang is precisely the waste continuous batching removes
+    n_tok = sum(m for _, m in reqs)
+
+    # warmup with the full workload (hits every page-table bucket width and
+    # snug batch shape the measured run will compile; the jitted steps are
+    # shared per-config so the measured runs are pure steady state)
+    run_dense(params, cfg, reqs, batch, max_new, max_len)
+    run_dense(params, cfg, reqs, batch, max_new, max_len, snug=True)
+    run_paged(params, cfg, reqs, batch, page_size, table_width,
+              prefill_chunk)
+    # interleaved best-of-N: shared-machine timing noise swings individual
+    # runs by 2x, so alternate engines and keep each engine's best run
+    t_dense = t_snug = t_paged = float("inf")
+    for _ in range(2):
+        t_dense = min(t_dense,
+                      run_dense(params, cfg, reqs, batch, max_new, max_len))
+        t_snug = min(t_snug,
+                     run_dense(params, cfg, reqs, batch, max_new, max_len,
+                               snug=True))
+        t_paged = min(t_paged,
+                      run_paged(params, cfg, reqs, batch, page_size,
+                                table_width, prefill_chunk))
+    return {
+        "smoke": smoke, "posit": posit, "n_req": n_req,
+        "prompt_lens": [min_len, max_len], "max_new": [min_new, max_new],
+        "batch": batch, "page_size": page_size,
+        "dense_tok_s": round(n_tok / t_dense, 2),
+        "dense_snug_tok_s": round(n_tok / t_snug, 2),
+        "paged_tok_s": round(n_tok / t_paged, 2),
+        # headline: paged vs the *stronger* dense baseline
+        "speedup": round(min(t_dense, t_snug) / t_paged, 3),
+        "speedup_vs_fixed": round(t_dense / t_paged, 3),
+    }
+
+
+def bench_all(smoke: bool = False, posit: str = "p16") -> dict:
+    """Both workload rows: uniform output budgets (the acceptance row —
+    only prompt lengths mixed) and mixed budgets (the harder row)."""
+    return {
+        "uniform_new": bench(smoke=smoke, posit=posit, uniform_new=True),
+        "mixed_new": bench(smoke=smoke, posit=posit, uniform_new=False),
+    }
+
+
+def run(report):
+    """benchmarks.run entry point."""
+    t0 = time.time()
+    res = bench_all(smoke=True)
+    report("serving_decode", (time.time() - t0) * 1e6, res)
+    _write(res)
+
+
+def _write(res: dict):
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"wrote {os.path.normpath(RESULTS_PATH)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--posit", choices=["off", "p8", "p16"], default="p16")
+    args = ap.parse_args()
+    res = bench_all(smoke=args.smoke, posit=args.posit)
+    print(json.dumps(res, indent=1))
+    _write(res)
+
+
+if __name__ == "__main__":
+    main()

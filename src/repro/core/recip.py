@@ -12,9 +12,23 @@ Implements:
     OUT=9 bits out) + NR rounds — the comparison row of Table II.
 
 The FPGA datapath evaluates Alg. 1 in fixed point; the TPU-native
-realisation here evaluates it in f32 on the VPU (exactly representable
-inputs: mantissas have <= 14 bits) and converts the quotient back to an
-integer mantissa for the posit rounding stage.
+realisation here does the same — int32 fixed point with explicit split
+multiplies — because it must be *bit-deterministic across backends*.  An
+earlier f32 evaluation was not: XLA may (and does, depending on the
+compilation context — eager vs jit vs Mosaic) contract `a*b + c` chains
+into FMAs, which changes the final ulp of the quotient estimate and made
+`kernels.posit_elementwise.divide(mode="poly")` disagree with
+`kernels.ref.divide_ref` on ~0.01% of posit16es1 operand pairs (see
+tests/test_divide_regression.py for the characterization).  Integer ops
+have no contraction freedom, so kernel == ref by construction everywhere.
+
+Fixed-point layout (everything fits int32 for n <= 16, the FPPU width
+guarantee of core.decode):
+
+    x  = m_b/2   in [0.5, 1)   14 frac bits (exact: X = Mb << (13 - Wd))
+    b,c,d,e,y    intermediates 14/28/28/28/28 frac bits
+    products     split hi/lo at 14 bits so every partial fits int32;
+                 each split truncation loses < 2^-28 absolute.
 """
 from __future__ import annotations
 
@@ -65,10 +79,13 @@ def _pacogen_table() -> np.ndarray:
 _PACOGEN_LUT = _pacogen_table()
 
 
-def recip_pacogen_f32(mb_frac: jnp.ndarray, cfg: PositConfig) -> jnp.ndarray:
-    """PACoGen LUT lookup: divisor fraction bits -> f32 approx of 1/m, m in [1,2).
+def pacogen_lut_i32(mb_frac: jnp.ndarray, cfg: PositConfig) -> jnp.ndarray:
+    """PACoGen LUT lookup: divisor fraction bits -> int 1/m mantissa with
+    PACOGEN_LUT_OUT frac bits (m in [1, 2), entries in [2^(OUT-1), 2^OUT]).
 
     mb_frac: the Wd-bit fraction of the divisor mantissa (hidden bit removed).
+    Pallas kernels patch this hook to read the LUT from a kernel input
+    (Pallas forbids captured array constants).
     """
     Wd = work_frac_bits(cfg)
     if Wd >= PACOGEN_LUT_IN:
@@ -76,8 +93,58 @@ def recip_pacogen_f32(mb_frac: jnp.ndarray, cfg: PositConfig) -> jnp.ndarray:
     else:
         idx = mb_frac << (PACOGEN_LUT_IN - Wd)
     lut = jnp.asarray(_PACOGEN_LUT)
-    y = lut[idx].astype(jnp.float32) * jnp.float32(1.0 / (1 << PACOGEN_LUT_OUT))
-    return y
+    return lut[idx].astype(jnp.int32)
+
+
+def recip_pacogen_f32(mb_frac: jnp.ndarray, cfg: PositConfig) -> jnp.ndarray:
+    """f32 view of the LUT reciprocal (ablation/benchmark convenience)."""
+    return (pacogen_lut_i32(mb_frac, cfg).astype(jnp.float32)
+            * jnp.float32(1.0 / (1 << PACOGEN_LUT_OUT)))
+
+
+# ---- int32 fixed-point datapath (the deterministic TPU realisation) -------
+_YF = 28          # frac bits of the reciprocal estimate y
+_SPLIT = 14       # hi/lo split point of 28f operands in the split multiplies
+
+
+def _mul_y(A: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
+    """(A * Y) >> 14 for A with <= 16 int bits and Y a 28f value <= ~2^30.
+
+    Split Y at 14 bits so both partial products fit int32; the dropped
+    low-product tail is < 2^-14 of one 28f ulp.  Works for negative A
+    (arithmetic shifts are floor division; Y must be nonnegative).
+    """
+    Yh = Y >> _SPLIT
+    Yl = Y & ((jnp.int32(1) << _SPLIT) - 1)
+    return A * Yh + ((A * Yl) >> _SPLIT)
+
+
+def recip_poly_fx(X: jnp.ndarray, k1: float = K1_OPT,
+                  k2: float = K2_OPT) -> jnp.ndarray:
+    """Algorithm 1 in int32 fixed point: X = x*2^14, x in [0.5, 1) ->
+    y0 = 4*(k2 - x*(k1-x))*(k1-x) at 28 frac bits."""
+    K1q = jnp.int32(round(k1 * (1 << 14)))        # 14f
+    K2q = jnp.int32(round(k2 * (1 << _YF)))       # 28f
+    B = K1q - X                                   # 14f, b in (0.457, 0.957]
+    C = X * B                                     # 28f exact, c < 1
+    D = K2q - C                                   # 28f, d in (0.044, 0.767]
+    E = _mul_y(B, D)                              # 28f, e = d*b < 0.735
+    return E << 2                                 # 28f, y0 = 4e in (0.17, 2.94]
+
+
+def nr_round_fx(Y: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """One Newton-Raphson round y <- y*(2 - x*y) in fixed point.
+
+    Y: 28f reciprocal estimate; X: x at 14 frac bits (poly: x in [0.5,1);
+    pacogen: m_b in [1,2) via X2 = Mb << (14-Wd)).  u = 2-t can go negative
+    on garbage lanes; arithmetic shifts keep that deterministic and the
+    final clip in approx_quotient discards it.
+    """
+    mask = (jnp.int32(1) << _SPLIT) - 1
+    T = _mul_y(X, Y)                              # 28f, t = x*y ~= 1
+    U = (jnp.int32(2) << _YF) - T                 # 28f, u = 2 - t
+    # y' = u*y, split U at 14 bits (Uh arithmetic-shifted, Ul nonnegative)
+    return _mul_y(U >> _SPLIT, Y) + (((U & mask) * (Y >> _SPLIT)) >> _SPLIT)
 
 
 def approx_quotient(Ma: jnp.ndarray, Mb: jnp.ndarray, cfg: PositConfig, *,
@@ -87,32 +154,32 @@ def approx_quotient(Ma: jnp.ndarray, Mb: jnp.ndarray, cfg: PositConfig, *,
 
     Ma, Mb: decoded significands in [2^Wd, 2^(Wd+1)).  The result feeds the
     shared posit rounding stage (ops.pdiv), optionally after an exact
-    remainder fix-up.
+    remainder fix-up.  All arithmetic is int32 fixed point, so the estimate
+    is bit-identical in eager jnp, jit, Pallas interpret and Mosaic — no
+    FP-contraction sensitivity (see module docstring).
     """
     Wd = work_frac_bits(cfg)
-    ma = Ma.astype(jnp.float32)
-    mb = Mb.astype(jnp.float32)
 
     if mode in ("poly", "poly_corrected"):
-        # x = m_b / 2 in (0.5, 1]; y ~= 1/x = 2/m_b
-        x = mb * jnp.float32(2.0 ** -(Wd + 1))
-        y = recip_poly_f32(x, k1, k2)
+        # x = m_b / 2 in [0.5, 1); y ~= 1/x = 2/m_b in (1, 2]
+        X = Mb << (13 - Wd)                       # 14f exact
+        Y = recip_poly_fx(X, k1, k2)              # 28f
         for _ in range(nr_rounds):
-            y = nr_round(y, x)
-        # q = m_a * (y/2) * 2^(wq+1) = Ma * y * 2^(wq - Wd)
-        q = ma * y * jnp.float32(2.0 ** (wq - Wd))
+            Y = nr_round_fx(Y, X)
+        # q = m_a * y * 2^(wq - Wd) = Ma * Y * 2^(wq - Wd - 28); wq-Wd == 3
+        q = _mul_y(Ma, Y) >> (_YF - _SPLIT - (wq - Wd))
     elif mode == "pacogen":
         frac = Mb - (jnp.int32(1) << Wd)
-        y = recip_pacogen_f32(frac, cfg)          # ~ 1/m_b in (0.5, 1]
-        x = mb * jnp.float32(2.0 ** -Wd)          # m_b in [1, 2)
+        Y = pacogen_lut_i32(frac, cfg) << (_YF - PACOGEN_LUT_OUT)  # 28f
+        X2 = Mb << (14 - Wd)                      # m_b in [1, 2) at 14f
         for _ in range(nr_rounds):
-            y = nr_round(y, x)
-        # q = m_a * y * 2^(wq+1) = Ma * y * 2^(wq + 1 - Wd)
-        q = ma * y * jnp.float32(2.0 ** (wq + 1 - Wd))
+            Y = nr_round_fx(Y, X2)
+        # q = m_a * y * 2^(wq + 1 - Wd); wq+1-Wd == 4
+        q = _mul_y(Ma, Y) >> (_YF - _SPLIT - (wq + 1 - Wd))
     else:
         raise ValueError(f"unknown division mode {mode!r}")
 
-    return jnp.clip(q, 1.0, 2.0 ** (wq + 2)).astype(jnp.int32)
+    return jnp.clip(q, jnp.int32(1), jnp.int32(1) << (wq + 2))
 
 
 # --------------------------------------------------------------------------

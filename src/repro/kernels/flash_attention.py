@@ -71,6 +71,110 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = acc_ref[...] / jnp.where(l == 0, 1.0, l)
 
 
+def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, cfg_kv, n_kv, groups,
+                         page, n_pages, scale):
+    """One (sequence, page) cell of the paged decode grid.
+
+    The page index was resolved by the BlockSpec index_map from the
+    prefetched page table, so k_ref/v_ref already hold this sequence's
+    j-th KV page in VMEM; posit pages decode here, right before the dot —
+    HBM only ever saw the narrow ints.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32).reshape(n_kv, groups, d)
+    k = k_ref[0]
+    v = v_ref[0]
+    if cfg_kv is not None:
+        k = decode_to_f32(k, cfg_kv)
+        v = decode_to_f32(v, cfg_kv)
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+    # s[kv, g, p] = q[kv, g, :] . k[kv, p, :]  (batched over the kv head)
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32,
+                                               (n_kv, groups, page), 2)
+    s = jnp.where(kpos < sl_ref[b], s, _NEG)
+
+    m_prev = m_ref[...][:, :, :1]                     # (n_kv, groups, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+        p.sum(axis=-1, keepdims=True), l_ref.shape)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+
+    @pl.when(j == n_pages - 1)
+    def _done():
+        l = l_ref[...][:, :, :1]
+        out = acc_ref[...] / jnp.where(l == 0, 1.0, l)
+        o_ref[0] = out.reshape(n_kv * groups, d)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_kv", "interpret"))
+def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
+                       v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                       seq_lens: jnp.ndarray, *,
+                       cfg_kv: PositConfig | None = None,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Fused paged-gather decode attention (the continuous-batching hot path).
+
+    q [B, H, D] x paged KV pool -> [B, H, D].  k_pages/v_pages
+    [num_pages, n_kv, page, D] hold posit storage ints when cfg_kv is set;
+    page_table [B, W] names each sequence's pages in position order and is
+    scalar-prefetched so the BlockSpec index_map can stream exactly the
+    pages a sequence owns — the dense `materialize_kv` copy never exists.
+    Positions >= seq_lens[b] (garbage-page tails, unallocated entries) are
+    masked.  GQA: H = n_kv * groups, query head h reads kv head h // groups.
+    """
+    bh, H, d = q.shape
+    n_pages_total, n_kv, page, _ = k_pages.shape
+    _, W = page_table.shape
+    groups = H // n_kv
+    scale = 1.0 / (d ** 0.5)
+    grid = (bh, W)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, d), lambda b, j, pt, sl: (b, 0, 0)),
+            pl.BlockSpec((1, n_kv, page, d),
+                         lambda b, j, pt, sl: (pt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, n_kv, page, d),
+                         lambda b, j, pt, sl: (pt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, d), lambda b, j, pt, sl: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, groups, 128), jnp.float32),
+            pltpu.VMEM((n_kv, groups, 128), jnp.float32),
+            pltpu.VMEM((n_kv, groups, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, cfg_kv=cfg_kv, n_kv=n_kv,
+                          groups=groups, page=page, n_pages=W, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, H, d), jnp.float32),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pages, v_pages)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("cfg_kv", "causal", "bq", "bk", "interpret"),

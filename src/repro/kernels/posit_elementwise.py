@@ -94,16 +94,15 @@ def _div_kernel_lut(a_ref, b_ref, lut_ref, o_ref, *, cfg, mode, nr_rounds):
         else:
             idx = mb_frac << (_recip.PACOGEN_LUT_IN - Wd)
         return (jnp.take(lut, idx.reshape(-1)).reshape(idx.shape)
-                .astype(jnp.float32)
-                * jnp.float32(1.0 / (1 << _recip.PACOGEN_LUT_OUT)))
+                .astype(jnp.int32))
 
-    orig = _recip.recip_pacogen_f32
-    _recip.recip_pacogen_f32 = lookup
+    orig = _recip.pacogen_lut_i32
+    _recip.pacogen_lut_i32 = lookup
     try:
         o_ref[...] = pops.pdiv(a_ref[...], b_ref[...], cfg, mode=mode,
                                nr_rounds=nr_rounds)
     finally:
-        _recip.recip_pacogen_f32 = orig
+        _recip.pacogen_lut_i32 = orig
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "mode", "nr_rounds",

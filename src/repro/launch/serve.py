@@ -1,11 +1,16 @@
 """Serving launcher: batched generation with posit-quantized weights/KV.
 
+    # synchronized dense-cache batch (the original engine)
     python -m repro.launch.serve --arch smollm-360m --smoke \
         --batch 4 --prompt-len 32 --max-new 16 --posit p16
 
+    # continuous batching over the paged posit KV pool
+    python -m repro.launch.serve --arch smollm-360m --smoke --engine paged \
+        --batch 4 --prompt-len 32 --max-new 16 --posit p16 --requests 16
+
 Runs PTQ (quant/ptq.py) on freshly-initialized (or checkpointed) weights,
-then serves a synthetic batch through prefill+decode — the same
-prefill_step/decode_step the dry-run lowers for the production mesh.
+then serves synthetic traffic.  The paged engine draws mixed prompt lengths
+in [prompt-len/4, prompt-len] so admission/retirement actually interleave.
 """
 from __future__ import annotations
 
@@ -17,14 +22,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=["dense", "paged"], default="dense")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch (dense) / sequence slots (paged)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--posit", choices=["off", "p8", "p16"], default="p16")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # paged-engine knobs
+    ap.add_argument("--requests", type=int, default=None,
+                    help="paged: total requests to serve (default 2*batch)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=64)
     args = ap.parse_args()
 
+    import numpy as np
     import jax
     import jax.numpy as jnp
     from repro import configs
@@ -33,7 +46,7 @@ def main():
     from repro.models.transformer import init_params
     from repro.quant.policy import PositPolicy
     from repro.quant.ptq import quantize_for_serving
-    from repro.serving.engine import generate
+    from repro.serving.engine import PagedServingEngine, generate
 
     pcfg = {"p8": P8_2, "p16": P16_2}.get(args.posit)
     policy = PositPolicy(weights=pcfg, kv_cache=pcfg) if pcfg else PositPolicy()
@@ -51,16 +64,43 @@ def main():
         nbytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(params))
         print(f"[serve] PTQ {pcfg}: weights now {nbytes/1e6:.1f} MB")
 
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    if args.engine == "dense":
+        prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                     (args.batch, args.prompt_len), 0,
+                                     cfg.vocab)
+        t0 = time.time()
+        out = generate(params, cfg, prompts, args.max_new,
+                       temperature=args.temperature)
+        out.block_until_ready()
+        dt = time.time() - t0
+        print(f"[serve] generated {out.shape} in {dt:.2f}s "
+              f"({args.batch * args.max_new / dt:.1f} tok/s incl. compile)")
+        print(out[:, :12])
+        return
+
+    # paged continuous batching: mixed-length synthetic traffic
+    n_req = args.requests or 2 * args.batch
+    rng = np.random.default_rng(1)
+    cap = args.prompt_len + args.max_new
+    width = max(2, -(-cap // args.page_size))
+    eng = PagedServingEngine(
+        params, cfg, max_seqs=args.batch, page_size=args.page_size,
+        table_width=width, prefill_chunk=args.prefill_chunk,
+        temperature=args.temperature)
+    reqs = []
+    for _ in range(n_req):
+        plen = int(rng.integers(max(1, args.prompt_len // 4),
+                                args.prompt_len + 1))
+        reqs.append((rng.integers(0, cfg.vocab, plen), args.max_new))
     t0 = time.time()
-    out = generate(params, cfg, prompts, args.max_new,
-                   temperature=args.temperature)
-    out.block_until_ready()
+    results = eng.run(reqs)
     dt = time.time() - t0
-    print(f"[serve] generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.max_new / dt:.1f} tok/s incl. compile)")
-    print(out[:, :12])
+    n_tok = sum(len(v) for v in results.values())
+    print(f"[serve] paged: {len(results)} requests, {n_tok} tokens in "
+          f"{dt:.2f}s ({n_tok / dt:.1f} tok/s incl. compile); "
+          f"stats={dict(eng.stats)}")
+    first = results[min(results)]
+    print(f"[serve] rid {min(results)}: {first[:12]}")
 
 
 if __name__ == "__main__":

@@ -132,8 +132,10 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
     fused dequant — HBM traffic stays at posit width and no full-cache
     float copy ever exists.
 
-    q_offset: absolute position of q[0] (decode: cache length; may be traced).
-    kv_len: number of valid KV positions (dynamic; default Skv).
+    q_offset: absolute position of q[0] (decode: cache length; may be traced;
+        scalar or per-sequence [B] for the paged engine's ragged batches).
+    kv_len: number of valid KV positions (dynamic; default Skv; scalar or
+        per-sequence [B]).
     window: sliding-window size (local attention, recurrentgemma).
     """
     from repro.core.array import unwrap_kv
@@ -145,6 +147,13 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
     scale = D ** -0.5
     if kv_len is None:
         kv_len = Skv
+    # normalize to a [B]-or-[1] vector: per-sequence lengths/offsets (paged
+    # continuous batching) and scalars share one code path; broadcasting a
+    # [1]-vector is bit-identical to the old scalar math
+    kv_len = jnp.asarray(kv_len)
+    kv_len = kv_len[None] if kv_len.ndim == 0 else kv_len
+    q_off = jnp.asarray(q_offset)
+    q_off = q_off[None] if q_off.ndim == 0 else q_off
 
     if Sq == 1:
         # decode fast path (flash-decoding layout): no scan — S-contraction
@@ -172,10 +181,10 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
         kpos = jnp.arange(Skv)
-        valid = kpos < kv_len
+        valid = kpos[None, :] < kv_len[:, None]
         if window is not None:
-            valid = valid & (kpos > kv_len - 1 - window)
-        s = jnp.where(valid[None, None, None, :], s, _NEG)
+            valid = valid & (kpos[None, :] > kv_len[:, None] - 1 - window)
+        s = jnp.where(valid[:, None, None, :], s, _NEG)
         m = s.max(axis=-1, keepdims=True)
         p = jnp.exp(s - m)
         out = jnp.einsum("bhqk,bhkd->bhqd", p, vf,
@@ -203,7 +212,7 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
         return t.astype(jnp.float32)
 
     def q_block(qi, q_tile):                     # q_tile [B,H,qc,D]
-        qpos = q_offset + qi * qc + jnp.arange(qc)
+        qpos = q_off[:, None] + qi * qc + jnp.arange(qc)[None, :]  # [B|1, qc]
 
         def kv_step(carry, inputs):
             m, l, acc = carry
@@ -222,12 +231,13 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
                            preferred_element_type=jnp.float32) * scale
             if softcap is not None:
                 s = jnp.tanh(s / softcap) * softcap
-            valid = (kpos < kv_len)[None, :]
+            valid = kpos[None, None, :] < kv_len[:, None, None]  # [B|1,1,kc]
             if causal:
-                valid = valid & (qpos[:, None] >= kpos[None, :])
+                valid = valid & (qpos[:, :, None] >= kpos[None, None, :])
             if window is not None:
-                valid = valid & (qpos[:, None] - kpos[None, :] < window)
-            s = jnp.where(valid[None, None], s, _NEG)
+                valid = valid & (qpos[:, :, None] - kpos[None, None, :]
+                                 < window)
+            s = jnp.where(valid[:, None], s, _NEG)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
@@ -295,6 +305,18 @@ def attention_block(x, p: Params, *, n_heads: int, n_kv: int, head_dim: int,
     new_cache = None
     kv_len = None
     legacy_cfg = None
+    if kv_cache is not None and "page_table" in kv_cache:
+        # paged pool (continuous batching): scatter-append the new tokens
+        # into this layer's pages, then attend through the paged path —
+        # fused Pallas paged-gather decode on TPU, gather+blockwise on CPU
+        from repro.serving.paged_kv import paged_append_kv, paged_attention
+        q_offset = kv_cache["seq_lens"]             # per-sequence, traced
+        new_cache = paged_append_kv(kv_cache, k, v)
+        out = paged_attention(q, new_cache, n_kv=n_kv, causal=causal,
+                              q_offset=q_offset, window=window,
+                              softcap=softcap)
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, n_heads * head_dim)
+        return linear(out, p["wo"], policy), new_cache
     if kv_cache is not None:
         from repro.serving.kv_cache import append_kv
         q_offset = kv_cache["length"]               # traced scalar

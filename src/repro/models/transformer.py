@@ -238,6 +238,62 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
     return {"scanned": scanned, "rem": rem}
 
 
+# ---- paged caches (continuous-batching serving; serving/paged_kv.py) ------
+def init_paged_pages(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=jnp.float32):
+    """Per-layer page pools in the same {scanned, rem} structure as
+    init_caches.  Attention-only patterns: recurrent state (rwkv/rglru) has
+    no paged analogue — the dense engine serves those."""
+    from repro.serving.paged_kv import init_layer_pages
+    for kind in cfg.block_pattern:
+        if kind not in ("attn", "attn_local"):
+            raise ValueError(f"paged serving supports attention-only "
+                             f"patterns, got {kind!r}")
+    reps = cfg.pattern_reps
+
+    def stack(kind):
+        one = init_layer_pages(num_pages, cfg.n_kv, page_size, cfg.hd,
+                               cfg.policy.kv_cache, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one)
+
+    scanned = tuple(stack(k) for k in cfg.block_pattern) if reps else ()
+    rem = tuple(init_layer_pages(num_pages, cfg.n_kv, page_size, cfg.hd,
+                                 cfg.policy.kv_cache, dtype)
+                for i in range(cfg.pattern_rem))
+    return {"scanned": scanned, "rem": rem}
+
+
+def assemble_paged_caches(pages, page_table, seq_lens, num_new):
+    """Pages tree + this step's scheduler inputs -> forward()-ready caches.
+
+    The scheduler fields are identical for every layer; scanned groups get
+    them broadcast over the stacked reps axis so lax.scan can slice them."""
+    from repro.serving.paged_kv import assemble_layer_cache
+
+    def one(p, stacked: bool):
+        if stacked:
+            reps = p["k_pages"].shape[0]
+            return assemble_layer_cache(
+                p,
+                jnp.broadcast_to(page_table, (reps,) + page_table.shape),
+                jnp.broadcast_to(seq_lens, (reps,) + seq_lens.shape),
+                jnp.broadcast_to(num_new, (reps,) + num_new.shape))
+        return assemble_layer_cache(p, page_table, seq_lens, num_new)
+
+    return {"scanned": tuple(one(p, True) for p in pages["scanned"]),
+            "rem": tuple(one(p, False) for p in pages["rem"])}
+
+
+def extract_paged_pages(caches):
+    """Inverse of assemble_paged_caches: keep only the device-resident
+    page pools (the scheduler recomputes the rest every step)."""
+    from repro.serving.paged_kv import extract_layer_pages
+    return {"scanned": tuple(extract_layer_pages(c)
+                             for c in caches["scanned"]),
+            "rem": tuple(extract_layer_pages(c) for c in caches["rem"])}
+
+
 # --------------------------------------------------------------------------
 # model init / forward
 # --------------------------------------------------------------------------
@@ -368,9 +424,16 @@ def forward(params: Params, cfg: ModelConfig, *, tokens=None,
 
 
 def _cache_length(caches, cfg: ModelConfig):
-    """Current sequence offset from the first attention cache (if any)."""
+    """Current sequence offset from the first attention cache (if any).
+
+    Dense caches: scalar length.  Paged caches: per-sequence seq_lens,
+    returned [B, 1] so `off + arange(S)` broadcasts to ragged positions."""
     for group in (caches["scanned"], caches["rem"]):
         for c in group:
+            if isinstance(c, dict) and "seq_lens" in c:
+                sl = c["seq_lens"]
+                sl = sl[0] if sl.ndim == 2 else sl    # unstack scanned reps
+                return sl[:, None]
             if isinstance(c, dict) and "length" in c:
                 ln = c["length"]
                 return ln[0] if ln.ndim else ln

@@ -1,14 +1,45 @@
-"""Batched serving engine: prefill + decode with (optionally posit) KV cache.
+"""Serving engines: synchronized-batch (dense cache) and continuous-batching
+(paged posit KV cache).
 
-Greedy/temperature sampling over a synchronized batch — the serve_step the
-dry-run lowers for decode_32k / long_500k is `decode_step` below.
+`generate` is the original synchronized engine — one batch, everyone
+prefills together, everyone decodes until the longest request finishes.  It
+remains the oracle the paged engine is tested against (identical batches
+must produce bit-identical logits) and the baseline
+benchmarks/serving_decode.py measures against.
+
+`PagedServingEngine` is the production shape: a host-side scheduler admits
+requests into sequence slots mid-flight, chunk-prefills their prompts,
+decodes all active slots in one fused step over the paged pool
+(serving/paged_kv.py), retires finished sequences and hands their pages to
+waiting requests immediately.  Out-of-pages triggers preemption (youngest
+sequence requeued, pages freed), so the engine degrades gracefully instead
+of OOMing.  Every device step runs through exactly two jitted callables
+(one prefill-chunk shape, one decode shape) built once per model config and
+shared across engines — zero retrace at steady state.  Two scheduling
+policies keep mixed-length traffic fast: the page-table width is bucketed
+to powers of two over the *participating* slots only (a short prompt's
+prefill chunks never pay a 4k-token neighbor's width; bounded extra traces,
+one per bucket), and admissions are batched so one prefill stall amortizes
+over several waiting prompts instead of interrupting decode per freed slot.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
+import functools
+from collections import deque
+
+import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models.transformer import ModelConfig, forward, init_caches
+from repro.models.transformer import (ModelConfig, assemble_paged_caches,
+                                      extract_paged_pages, forward,
+                                      init_caches, init_paged_pages)
+
+# python-body executions of the traced step fns — i.e. trace counts.  Tests
+# assert the steady state adds zero entries here (the retrace regression).
+STEP_TRACES: collections.Counter = collections.Counter()
 
 
 def prefill_step(params, cfg: ModelConfig, tokens, caches):
@@ -28,6 +59,25 @@ def sample(logits, key, temperature: float = 0.0):
     return jax.random.categorical(key, logits / temperature, axis=-1)
 
 
+@functools.lru_cache(maxsize=64)
+def _dense_steps(cfg: ModelConfig):
+    """Jitted prefill/decode steps, built once per model config.
+
+    generate() used to rebuild `jax.jit(lambda ...)` wrappers per call,
+    which made every call (and every distinct max_new via the fresh cache
+    shape) retrace.  The lru_cache keys the jitted objects on the hashable
+    ModelConfig, so steady-state serving reuses one trace per shape."""
+    def pf(p, t, c):
+        STEP_TRACES[("dense_prefill", cfg.name)] += 1
+        return prefill_step(p, cfg, t, c)
+
+    def dc(p, t, c):
+        STEP_TRACES[("dense_decode", cfg.name)] += 1
+        return decode_step(p, cfg, t, c)
+
+    return jax.jit(pf), jax.jit(dc)
+
+
 def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, max_new: int,
              max_len: int | None = None, temperature: float = 0.0,
              seed: int = 0):
@@ -36,8 +86,7 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, max_new: int,
     max_len = max_len or (S + max_new)
     caches = init_caches(cfg, B, max_len, dtype=jnp.dtype(cfg.dtype))
 
-    pf = jax.jit(lambda p, t, c: prefill_step(p, cfg, t, c))
-    dc = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    pf, dc = _dense_steps(cfg)
 
     logits, caches = pf(params, prompts, caches)
     key = jax.random.PRNGKey(seed)
@@ -50,3 +99,339 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, max_new: int,
         tok = sample(logits, sub, temperature)[:, None].astype(jnp.int32)
         out.append(tok)
     return jnp.concatenate(out, axis=1)
+
+
+# ==========================================================================
+# continuous batching over the paged pool
+# ==========================================================================
+@functools.lru_cache(maxsize=64)
+def _paged_step(cfg: ModelConfig):
+    """The fused paged serving step, jitted once per model config and shared
+    by every engine instance (a per-engine jit would recompile identical
+    shapes for each engine — e.g. one per benchmark repetition)."""
+    def step(p, tokens, pages, pt, sl, nn):
+        STEP_TRACES[("paged_step", cfg.name, tokens.shape[1],
+                     pt.shape[1])] += 1
+        caches = assemble_paged_caches(pages, pt, sl, nn)
+        logits, _, new_caches = forward(p, cfg, tokens=tokens, caches=caches)
+        # last *valid* position per slot (ragged prefill chunks)
+        idx = jnp.clip(nn - 1, 0, tokens.shape[1] - 1)
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+        return last, extract_paged_pages(new_caches)
+
+    return jax.jit(step, donate_argnums=(2,))
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S] int32
+    max_new: int
+    # tokens generated before a preemption: the resumed request re-prefills
+    # prompt+prior and only owes max_new - len(prior) more tokens, but the
+    # caller still receives all of them
+    prior: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int32))
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    admit_order: int
+    pages: list                  # page ids owned, in position order
+    prefill_pos: int = 0         # prompt tokens already written
+    generated: list = dataclasses.field(default_factory=list)
+    next_token: int = -1         # token to feed at the next decode step
+
+    @property
+    def phase(self) -> str:
+        return "prefill" if self.prefill_pos < len(self.req.prompt) \
+            else "decode"
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.req.max_new
+
+
+class PagedServingEngine:
+    """Continuous-batching serving over a paged (optionally posit) KV pool.
+
+    params/cfg as for generate(); attention-only block patterns.
+
+    max_seqs:     sequence slots (the fused step's batch dimension)
+    page_size:    tokens per KV page
+    table_width:  max pages per sequence (caps sequence length)
+    num_pages:    pool size; default fits max_seqs full-length sequences
+    prefill_chunk: prompt tokens written per prefill step (fixed shape)
+    admit_threshold: batch admissions — hold freed slots until this many
+        are free (or nothing is decoding / a prefill phase is already
+        running) so one prefill stall amortizes over several prompts;
+        default max_seqs // 2, 0 = admit eagerly
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_seqs: int = 8,
+                 page_size: int = 64, table_width: int = 16,
+                 num_pages: int | None = None, prefill_chunk: int = 128,
+                 temperature: float = 0.0, seed: int = 0,
+                 bucket_pages: bool = True,
+                 admit_threshold: int | None = None):
+        self.params, self.cfg = params, cfg
+        self.max_seqs, self.page = max_seqs, page_size
+        self.width = table_width
+        self.chunk = prefill_chunk
+        self.temperature = temperature
+        self.bucket_pages = bucket_pages
+        self.admit_threshold = (max_seqs // 2 if admit_threshold is None
+                                else admit_threshold)
+        num_pages = num_pages or (max_seqs * table_width + 1)
+        self.num_pages = num_pages
+        self.pages = init_paged_pages(cfg, num_pages, page_size,
+                                      dtype=jnp.dtype(cfg.dtype))
+        # host scheduler state; page 0 is the reserved garbage page
+        self.free_pages = list(range(num_pages - 1, 0, -1))
+        self.table = np.zeros((max_seqs, table_width), np.int32)
+        self.seq_lens = np.zeros((max_seqs,), np.int32)
+        self.slots: list[_Slot | None] = [None] * max_seqs
+        self.waiting: deque[Request] = deque()
+        self._admitted = 0
+        self._next_rid = 0
+        self._rng = np.random.default_rng(seed)
+        self.finished: dict[int, np.ndarray] = {}
+        self.stats = collections.Counter()
+
+        self._step_fn = _paged_step(cfg)
+
+    # ---- host-side paging ------------------------------------------------
+    def _ensure_pages(self, i: int, upto: int):
+        """Slot i needs capacity for `upto` tokens; allocate (and preempt
+        if the pool is dry)."""
+        slot = self.slots[i]
+        need = -(-upto // self.page)
+        if need > self.width:
+            raise ValueError(f"request {slot.req.rid}: {upto} tokens exceed "
+                             f"table_width*page_size = {self.width * self.page}")
+        while len(slot.pages) < need:
+            if not self.free_pages:
+                if not self._preempt(exclude=i):
+                    raise RuntimeError(
+                        "KV pool exhausted and nothing left to preempt; "
+                        "grow num_pages or lower max_seqs")
+                continue
+            pg = self.free_pages.pop()
+            self.table[i, len(slot.pages)] = pg
+            slot.pages.append(pg)
+
+    def _free_slot(self, i: int):
+        slot = self.slots[i]
+        self.free_pages.extend(reversed(slot.pages))
+        self.table[i, :] = 0
+        self.seq_lens[i] = 0
+        self.slots[i] = None
+
+    def _preempt(self, exclude: int) -> bool:
+        """Evict the youngest other sequence: free its pages and requeue it
+        (prompt + generated so far) at the front of the wait queue."""
+        victims = [(s.admit_order, i) for i, s in enumerate(self.slots)
+                   if s is not None and i != exclude]
+        if not victims:
+            return False
+        _, i = max(victims)
+        slot = self.slots[i]
+        req = slot.req
+        # restart from the full prompt + whatever was already generated
+        gen = np.asarray(slot.generated, np.int32)
+        new_prompt = np.concatenate([req.prompt, gen])
+        remaining = req.max_new - len(slot.generated)
+        self.waiting.appendleft(Request(req.rid, new_prompt, remaining,
+                                        prior=np.concatenate([req.prior,
+                                                              gen])))
+        self._free_slot(i)
+        self.stats["preempted"] += 1
+        return True
+
+    def _admit(self):
+        if not self.waiting:
+            return
+        # admission batching: a mid-flight admission stalls every decoding
+        # slot for the new prompt's chunk steps, so hold freed slots until
+        # several can prefill together.  Admit immediately when a prefill
+        # phase is already running (joining it is ~free), when nothing is
+        # decoding (nothing to stall), or when enough slots accumulated.
+        phases = [s.phase for s in self.slots if s is not None]
+        n_free = self.max_seqs - len(phases)
+        if ("decode" in phases and "prefill" not in phases
+                and n_free < max(1, self.admit_threshold)):
+            return
+        for i in range(self.max_seqs):
+            if not self.waiting:
+                return
+            if self.slots[i] is not None:
+                continue
+            req = self.waiting[0]
+            # admit when the prompt (+ first generated token) fits the pool
+            need = -(-(len(req.prompt) + 1) // self.page)
+            if need > len(self.free_pages):
+                if self.active == 0:
+                    raise RuntimeError(
+                        f"request {req.rid} needs {need} pages but the idle "
+                        f"pool only has {len(self.free_pages)}; grow "
+                        f"num_pages")
+                return
+            self.waiting.popleft()
+            self.slots[i] = _Slot(req=req, admit_order=self._admitted,
+                                  pages=[])
+            self._admitted += 1
+            self.stats["admitted"] += 1
+
+    # ---- public API ------------------------------------------------------
+    def submit(self, prompt, max_new: int, rid: int | None = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            # an empty prompt would enter decode with the -1 sentinel as a
+            # real token (wrapping to the last vocab row); reject instead
+            raise ValueError("prompt must contain at least one token")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if len(prompt) + max_new > self.width * self.page:
+            raise ValueError(f"prompt+max_new = {len(prompt) + max_new} "
+                             f"exceeds per-sequence capacity "
+                             f"{self.width * self.page}")
+        if rid is None:
+            rid = self._next_rid
+        elif (rid in self.finished
+              or any(r.rid == rid for r in self.waiting)
+              or any(s is not None and s.req.rid == rid
+                     for s in self.slots)):
+            # a colliding rid would silently overwrite the other request's
+            # results in `finished`
+            raise ValueError(f"request id {rid} is already in use")
+        self._next_rid = max(self._next_rid, rid + 1)
+        self.waiting.append(Request(rid, prompt, max_new))
+        return rid
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _sample_host(self, logits_row: np.ndarray) -> int:
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / self.temperature
+        z = z - z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    def _table_view(self, participants):
+        """Power-of-two bucketed page-table slice sized to the sequences
+        that actually compute this step (each bucket compiles once).
+
+        Prefill steps pass only the prefilling slots: a short prompt then
+        pays its own width even while a 4k-token sequence sits in a decode
+        slot (that slot's num_new is 0 — its outputs are ignored and its
+        writes dropped, so truncating its pages out of the view is safe)."""
+        if not self.bucket_pages:
+            return self.table
+        used = max([len(self.slots[i].pages) for i in participants
+                    if self.slots[i] is not None], default=1)
+        w = 1
+        while w < max(used, 1):
+            w *= 2
+        w = min(max(w, 1), self.width)
+        return self.table[:, :w]
+
+    def _run_step(self, tokens: np.ndarray, num_new: np.ndarray,
+                  participants):
+        pt = jnp.asarray(self._table_view(participants))
+        sl = jnp.asarray(self.seq_lens)
+        nn = jnp.asarray(num_new)
+        logits, self.pages = self._step_fn(
+            self.params, jnp.asarray(tokens), self.pages, pt, sl, nn)
+        self.seq_lens += num_new
+        return np.asarray(logits)
+
+    def step(self) -> list[tuple[int, int]]:
+        """One scheduler iteration; returns (rid, token) pairs emitted."""
+        # retire finished sequences, then fill freed slots from the queue
+        for i, slot in enumerate(self.slots):
+            if slot is not None and slot.done:
+                self.finished[slot.req.rid] = np.concatenate(
+                    [slot.req.prior, np.asarray(slot.generated, np.int32)])
+                self._free_slot(i)
+                self.stats["finished"] += 1
+        self._admit()
+
+        prefilling = [i for i, s in enumerate(self.slots)
+                      if s is not None and s.phase == "prefill"]
+        emitted: list[tuple[int, int]] = []
+        if prefilling:
+            # page in first: allocation may preempt a slot (even one in
+            # `prefilling`), so the batch is built only from survivors
+            for i in prefilling:
+                s = self.slots[i]
+                if s is None:
+                    continue
+                part_len = min(self.chunk,
+                               len(s.req.prompt) - s.prefill_pos)
+                self._ensure_pages(i, int(self.seq_lens[i]) + part_len)
+            alive = [i for i in prefilling if self.slots[i] is not None]
+            if not alive:
+                return emitted
+            tokens = np.zeros((self.max_seqs, self.chunk), np.int32)
+            num_new = np.zeros((self.max_seqs,), np.int32)
+            for i in alive:
+                s = self.slots[i]
+                part = s.req.prompt[s.prefill_pos:s.prefill_pos + self.chunk]
+                tokens[i, :len(part)] = part
+                num_new[i] = len(part)
+            logits = self._run_step(tokens, num_new, alive)
+            for i in alive:
+                s = self.slots[i]
+                s.prefill_pos += int(num_new[i])
+                if s.phase == "decode":
+                    tok = self._sample_host(logits[i])
+                    s.generated.append(tok)
+                    s.next_token = tok
+                    emitted.append((s.req.rid, tok))
+            self.stats["prefill_steps"] += 1
+            return emitted
+
+        decoding = [i for i, s in enumerate(self.slots)
+                    if s is not None and s.phase == "decode" and not s.done]
+        if not decoding:
+            return emitted
+        for i in decoding:
+            if self.slots[i] is not None:
+                self._ensure_pages(i, int(self.seq_lens[i]) + 1)
+        decoding = [i for i in decoding if self.slots[i] is not None]
+        if not decoding:
+            return emitted
+        tokens = np.zeros((self.max_seqs, 1), np.int32)
+        num_new = np.zeros((self.max_seqs,), np.int32)
+        for i in decoding:
+            tokens[i, 0] = self.slots[i].next_token
+            num_new[i] = 1
+        logits = self._run_step(tokens, num_new, decoding)
+        for i in decoding:
+            s = self.slots[i]
+            tok = self._sample_host(logits[i])
+            s.generated.append(tok)
+            s.next_token = tok
+            emitted.append((s.req.rid, tok))
+        self.stats["decode_steps"] += 1
+        return emitted
+
+    def run(self, requests=None, max_steps: int | None = None
+            ) -> dict[int, np.ndarray]:
+        """Drain: submit `requests` (iterable of (prompt, max_new)) and step
+        until everything finished.  Returns {rid: generated tokens}."""
+        if requests is not None:
+            for prompt, max_new in requests:
+                self.submit(prompt, max_new)
+        steps = 0
+        while self.waiting or self.active:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return dict(self.finished)

@@ -10,7 +10,6 @@ explicit decode on the jnp path — either way HBM sees only narrow ints).
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core.array import PositArray, PositConfigMismatchError
 from repro.core.convert import f32_to_posit
@@ -55,11 +54,14 @@ def append_kv(cache, k, v, cfg: PositConfig | None = None):
     The storage format comes from the cache buffers themselves; the `cfg`
     argument remains only as a deprecated shim for legacy raw-int caches.
 
-    Decode-sized appends (S_new << S_max) use a masked elementwise write
-    instead of dynamic_update_slice: a DUS at a *traced* index on a sharded
-    sequence dim makes GSPMD gather the whole buffer (involuntary
-    rematerialization); where()+iota stays fully sharded.  Prefill-sized
-    appends start at 0 with a static extent, where DUS is sharding-safe.
+    Every append is a masked elementwise write (where()+iota), never a
+    dynamic_update_slice: a DUS at a *traced* index on a sharded sequence
+    dim makes GSPMD gather the whole buffer (involuntary rematerialization),
+    and the traced `length` start means no append has a static index.  (An
+    earlier prefill fast path did DUS at a hard-coded start 0, which
+    silently clobbered tokens 0..length on chunked prefill into a part-full
+    cache.)  Tokens past s_max are dropped — one capacity contract for
+    every append size.
     """
     cfg = _cache_cfg(cache, cfg)
     posit_pages = isinstance(cache["k"], PositArray)
@@ -74,27 +76,21 @@ def append_kv(cache, k, v, cfg: PositConfig | None = None):
     start = cache["length"]
     s_new, s_max = k.shape[2], kbuf.shape[2]
 
-    if s_new * 4 >= s_max:
-        # prefill: static start (the cache is empty; length is 0 by
-        # construction of the serving engine)
-        new_k = lax.dynamic_update_slice(kbuf, k, (0, 0, 0, 0))
-        new_v = lax.dynamic_update_slice(vbuf, v, (0, 0, 0, 0))
+    pos = jnp.arange(s_max)
+    mask = (pos >= start) & (pos < start + s_new)
+    if s_new == 1:
+        # single-token decode: broadcast + where, purely elementwise
+        def write(buf, new):
+            return jnp.where(mask[None, None, :, None],
+                             jnp.broadcast_to(new[:, :, 0:1], buf.shape),
+                             buf)
     else:
-        pos = jnp.arange(s_max)
-        mask = (pos >= start) & (pos < start + s_new)
-        if s_new == 1:
-            # single-token decode: broadcast + where, purely elementwise
-            def write(buf, new):
-                return jnp.where(mask[None, None, :, None],
-                                 jnp.broadcast_to(new[:, :, 0:1], buf.shape),
-                                 buf)
-        else:
-            idx = jnp.clip(pos - start, 0, s_new - 1)
-            def write(buf, new):
-                cand = jnp.take(new, idx, axis=2)
-                return jnp.where(mask[None, None, :, None], cand, buf)
-        new_k = write(kbuf, k)
-        new_v = write(vbuf, v)
+        idx = jnp.clip(pos - start, 0, s_new - 1)
+        def write(buf, new):
+            cand = jnp.take(new, idx, axis=2)
+            return jnp.where(mask[None, None, :, None], cand, buf)
+    new_k = write(kbuf, k)
+    new_v = write(vbuf, v)
     if posit_pages:
         new_k = PositArray(new_k, cfg)
         new_v = PositArray(new_v, cfg)

@@ -1,0 +1,194 @@
+"""Block-paged posit KV cache — the serving-side memory system.
+
+The dense cache (`serving.kv_cache`) allocates `(B, n_kv, max_len, D)` per
+sequence slot: every request pays for the longest request's worth of HBM,
+and a finished sequence's buffer cannot be handed to a waiting one.  This
+module replaces that with a vLLM-style paged pool:
+
+  * one global page pool per attention layer — `k_pages`/`v_pages` of shape
+    `[num_pages, n_kv, page_size, head_dim]`, `PositArray` pages when the
+    serving policy stores posit KV (paper C4/C6: posit8/16 quarters/halves
+    the bytes decode streams from HBM) or float pages otherwise;
+  * a per-sequence `page_table [max_seqs, table_width]` of page indices and
+    `seq_lens [max_seqs]` — sequences own only the pages they filled, so
+    finished sequences return capacity immediately (continuous batching);
+  * page 0 is reserved as the garbage page: unallocated table entries point
+    at it (reads beyond a sequence's length land there and are masked) —
+    it is never allocated to a sequence.  Masked *writes* are dropped
+    outright via a truly out-of-bounds scatter index (see paged_append_kv),
+    so no page, including page 0, is ever written by an inactive slot.
+
+The scheduler fields (`page_table`, `seq_lens`, `num_new`) are *inputs* of
+every serving step — the host-side scheduler (serving.engine) computes them
+between steps and the jitted step assembles them into the per-layer cache
+dicts.  Only the page pools live on device across steps (donated through
+the jit), so a step moves O(max_seqs * table_width) scheduler ints and
+nothing else.
+
+Layer cache dict layout (travels through models.transformer like the dense
+dict; distinguished by the "page_table" key):
+
+    {"k_pages", "v_pages", "page_table", "seq_lens", "num_new"}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.array import PositArray
+from repro.core.convert import f32_to_posit
+from repro.core.types import PositConfig
+
+GARBAGE_PAGE = 0   # page index reserved for masked/invalid writes
+
+
+def init_layer_pages(num_pages: int, n_kv: int, page_size: int, head_dim: int,
+                     cfg: PositConfig | None, dtype=jnp.float32):
+    """One attention layer's page pools: {"k_pages", "v_pages"}."""
+    shape = (num_pages, n_kv, page_size, head_dim)
+    if cfg is not None:
+        dt = jnp.dtype(cfg.storage_dtype_name)
+        return {"k_pages": PositArray(jnp.zeros(shape, dt), cfg),
+                "v_pages": PositArray(jnp.zeros(shape, dt), cfg)}
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+def assemble_layer_cache(pages: dict, page_table, seq_lens, num_new) -> dict:
+    """Pages (device state) + scheduler inputs -> the per-layer cache dict."""
+    return {"k_pages": pages["k_pages"], "v_pages": pages["v_pages"],
+            "page_table": page_table, "seq_lens": seq_lens,
+            "num_new": num_new}
+
+
+def extract_layer_pages(cache: dict) -> dict:
+    return {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
+
+
+def is_paged(cache) -> bool:
+    return isinstance(cache, dict) and "page_table" in cache
+
+
+def page_size_of(cache) -> int:
+    return cache["k_pages"].shape[2]
+
+
+def paged_append_kv(cache: dict, k, v) -> dict:
+    """Scatter `num_new` new tokens per sequence into the page pool.
+
+    k, v: [B, n_kv, S, D] float.  Token j of sequence i lands at logical
+    position `seq_lens[i] + j` -> (page_table[i, pos // page], pos % page);
+    positions with j >= num_new[i] (inactive slots, ragged prefill tails)
+    are dropped via out-of-bounds scatter indices.  Distinct live (i, j)
+    always hit distinct (page, offset) slots, so the scatter is
+    collision-free by construction.
+    """
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    posit_pages = isinstance(kp, PositArray)
+    pcfg = kp.cfg if posit_pages else None
+    kbuf = kp.bits if posit_pages else kp
+    vbuf = vp.bits if posit_pages else vp
+    if pcfg is not None:
+        k = f32_to_posit(k.astype(jnp.float32), pcfg)
+        v = f32_to_posit(v.astype(jnp.float32), pcfg)
+    else:
+        k = k.astype(kbuf.dtype)
+        v = v.astype(vbuf.dtype)
+
+    table, seq_lens, num_new = (cache["page_table"], cache["seq_lens"],
+                                cache["num_new"])
+    B, n_kv, S, D = k.shape
+    page = kbuf.shape[2]
+    width = table.shape[1]
+
+    pos = seq_lens[:, None] + jnp.arange(S)[None, :]            # [B, S]
+    valid = jnp.arange(S)[None, :] < num_new[:, None]           # [B, S]
+    slot = pos // page                                          # [B, S]
+    in_table = slot < width
+    page_idx = jnp.take_along_axis(table, jnp.clip(slot, 0, width - 1),
+                                   axis=1)
+    # invalid writes -> index num_pages, truly out of bounds, so the scatter
+    # drops them.  (-1 would NOT work: jnp .at[] wraps negative indices
+    # numpy-style and the write would land in the pool's last page.)
+    page_idx = jnp.where(valid & in_table, page_idx, kbuf.shape[0])
+    off = pos % page
+
+    flat_pg = page_idx.reshape(-1)
+    flat_off = off.reshape(-1)
+    kv_vals = k.transpose(0, 2, 1, 3).reshape(B * S, n_kv, D)
+    vv_vals = v.transpose(0, 2, 1, 3).reshape(B * S, n_kv, D)
+    new_k = kbuf.at[flat_pg, :, flat_off, :].set(kv_vals, mode="drop")
+    new_v = vbuf.at[flat_pg, :, flat_off, :].set(vv_vals, mode="drop")
+    if posit_pages:
+        new_k = PositArray(new_k, pcfg)
+        new_v = PositArray(new_v, pcfg)
+    return {"k_pages": new_k, "v_pages": new_v, "page_table": table,
+            "seq_lens": seq_lens + num_new, "num_new": num_new}
+
+
+def gather_kv(cache: dict):
+    """Dense view of the paged cache: [B, n_kv, table_width * page, D].
+
+    Page p of sequence i occupies positions [p*page, (p+1)*page) in order,
+    so the gathered view is position-identical to a dense cache of
+    max_len == table_width * page — the basis of the paged-vs-dense
+    bit-exactness guarantee (and of the jnp attention path; the Pallas
+    kernel gathers page-by-page in VMEM instead, see
+    kernels.flash_attention.paged_flash_decode).
+    """
+    kp, vp = cache["k_pages"], cache["v_pages"]
+    posit_pages = isinstance(kp, PositArray)
+    kbuf = kp.bits if posit_pages else kp
+    vbuf = vp.bits if posit_pages else vp
+    table = cache["page_table"]
+    B, W = table.shape
+    _, n_kv, page, D = kbuf.shape
+
+    def dense(buf):
+        g = buf[table]                                  # [B, W, n_kv, page, D]
+        g = g.transpose(0, 2, 1, 3, 4).reshape(B, n_kv, W * page, D)
+        return g
+
+    k, v = dense(kbuf), dense(vbuf)
+    if posit_pages:
+        return PositArray(k, kp.cfg), PositArray(v, vp.cfg)
+    return k, v
+
+
+def paged_attention(q, cache: dict, *, n_kv: int, causal: bool = True,
+                    q_offset=None, window: int | None = None,
+                    softcap: float | None = None, interpret: bool = False):
+    """Attention over a paged cache.  q: [B, H, Sq, D] float.
+
+    Decode steps (Sq == 1, no window/softcap) take the fused Pallas
+    paged-gather kernel on TPU — pages decode in VMEM right before the MXU,
+    no dense materialization.  Everything else (prefill chunks, windowed
+    attention, the CPU path) gathers the dense view and reuses
+    models.blocks.blockwise_attention, which is bit-identical to the dense
+    engine by construction.
+    """
+    from repro.kernels import ops as kops
+
+    B, H, Sq, D = q.shape
+    if q_offset is None:
+        # the cache is post-append: queries start where this step's tokens
+        # were written.  (None must not reach blockwise_attention — it would
+        # become a NaN position and mask every key.)
+        q_offset = cache["seq_lens"] - cache["num_new"]
+    kp = cache["k_pages"]
+    posit_pages = isinstance(kp, PositArray)
+    if (Sq == 1 and window is None and softcap is None and kops.use_pallas()):
+        from repro.kernels.flash_attention import paged_flash_decode
+        kbuf = kp.bits if posit_pages else kp
+        vbuf = cache["v_pages"].bits if posit_pages else cache["v_pages"]
+        out = paged_flash_decode(
+            q[:, :, 0, :], kbuf, vbuf, cache["page_table"],
+            cache["seq_lens"], cfg_kv=kp.cfg if posit_pages else None,
+            interpret=interpret)
+        return out[:, :, None, :].astype(q.dtype)
+
+    from repro.models.blocks import blockwise_attention
+    k, v = gather_kv(cache)
+    return blockwise_attention(q, k, v, n_kv=n_kv, causal=causal,
+                               q_offset=q_offset, window=window,
+                               softcap=softcap, kv_len=cache["seq_lens"])

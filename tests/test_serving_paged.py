@@ -1,0 +1,224 @@
+"""Paged KV cache + continuous-batching engine: correctness vs the dense
+oracle (bit-exact logits), eviction/slot-reuse, paged flash-decode parity,
+chunked prefill, and the zero-retrace guarantees."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.types import P8_2, P16_2
+from repro.models.transformer import (ModelConfig, assemble_paged_caches,
+                                      extract_paged_pages, forward,
+                                      init_caches, init_params,
+                                      init_paged_pages)
+from repro.quant.policy import PositPolicy
+from repro.serving import engine as E
+from repro.serving.kv_cache import append_kv, init_cache, materialize_kv
+from repro.serving.paged_kv import gather_kv, paged_append_kv
+
+
+def _cfg(pcfg, **kw):
+    return ModelConfig(name="tst", n_layers=2, d_model=32, n_heads=4,
+                       n_kv=2, d_ff=64, vocab=50,
+                       policy=PositPolicy(kv_cache=pcfg), **kw)
+
+
+def _sequential_table(B, W):
+    pt = np.zeros((B, W), np.int32)
+    pt[:] = 1 + np.arange(B * W).reshape(B, W)
+    return jnp.asarray(pt)
+
+
+@pytest.mark.parametrize("pcfg", [None, P16_2, P8_2],
+                         ids=["float", "p16", "p8"])
+def test_paged_vs_dense_logits_bit_exact(pcfg):
+    """Same batch through the dense cache and the paged pool: prefill and
+    decode logits must agree bit for bit (same ops, same element order —
+    the gathered page view is position-identical to the dense buffer)."""
+    cfg = _cfg(pcfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S, page, W = 2, 6, 4, 8
+    max_len = page * W
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+    dense = init_caches(cfg, B, max_len)
+    ld, _, dense = forward(params, cfg, tokens=toks, caches=dense)
+
+    pages = init_paged_pages(cfg, num_pages=1 + B * W, page_size=page)
+    pt = _sequential_table(B, W)
+    caches = assemble_paged_caches(pages, pt, jnp.zeros((B,), jnp.int32),
+                                   jnp.full((B,), S, jnp.int32))
+    lp, _, caches = forward(params, cfg, tokens=toks, caches=caches)
+    pages = extract_paged_pages(caches)
+    assert jnp.array_equal(ld, lp), "prefill logits diverge"
+
+    tok = jnp.argmax(ld[:, -1], -1)[:, None].astype(jnp.int32)
+    ld2, _, dense = forward(params, cfg, tokens=tok, caches=dense)
+    caches = assemble_paged_caches(pages, pt, jnp.full((B,), S, jnp.int32),
+                                   jnp.ones((B,), jnp.int32))
+    lp2, _, _ = forward(params, cfg, tokens=tok, caches=caches)
+    assert jnp.array_equal(ld2, lp2), "decode logits diverge"
+
+
+@pytest.mark.parametrize("pcfg", [None, P16_2, P8_2],
+                         ids=["float", "p16", "p8"])
+def test_paged_flash_decode_vs_materialized_dense_attention(pcfg):
+    """The Pallas paged-gather decode kernel (interpret mode) vs the
+    materialize_kv + dense flash-attention oracle at mixed lengths."""
+    from repro.core.convert import f32_to_posit
+    from repro.kernels.flash_attention import paged_flash_decode
+    from repro.kernels.ref import flash_attention_ref
+
+    rng = np.random.default_rng(3)
+    B, n_kv, G, D, page, W = 3, 2, 2, 16, 8, 4
+    H = n_kv * G
+    seq_lens = np.asarray([5, 17, 32], np.int32)
+    pt = np.asarray(_sequential_table(B, W))
+    kd = rng.normal(size=(1 + B * W, n_kv, page, D)).astype(np.float32)
+    vd = rng.normal(size=(1 + B * W, n_kv, page, D)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
+    if pcfg is not None:
+        kp = f32_to_posit(jnp.asarray(kd), pcfg)
+        vp = f32_to_posit(jnp.asarray(vd), pcfg)
+    else:
+        kp, vp = jnp.asarray(kd), jnp.asarray(vd)
+
+    out = paged_flash_decode(q, kp, vp, jnp.asarray(pt),
+                             jnp.asarray(seq_lens), cfg_kv=pcfg,
+                             interpret=True)
+    for i in range(B):
+        # materialize this sequence's pages densely, run the ref oracle
+        kk = np.concatenate([np.asarray(kp)[pt[i, j]] for j in range(W)],
+                            axis=1)[:, :seq_lens[i]]
+        vv = np.concatenate([np.asarray(vp)[pt[i, j]] for j in range(W)],
+                            axis=1)[:, :seq_lens[i]]
+        qq = np.asarray(q[i]).reshape(n_kv, G, D)
+        for h in range(n_kv):
+            ref = flash_attention_ref(jnp.asarray(qq[h][None]),
+                                      jnp.asarray(kk[h][None]),
+                                      jnp.asarray(vv[h][None]),
+                                      cfg_kv=pcfg, causal=False)
+            got = np.asarray(out[i]).reshape(n_kv, G, D)[h]
+            np.testing.assert_allclose(got, np.asarray(ref[0]), rtol=2e-6,
+                                       atol=2e-6)
+
+
+def test_paged_append_drops_masked_writes_out_of_bounds():
+    """Masked scatter rows must vanish, not wrap into the last page (the
+    -1-index clobber this PR fixed)."""
+    cfg = _cfg(P16_2)
+    pages = init_paged_pages(cfg, num_pages=4, page_size=4)
+    layer = pages["scanned"][0]     # stacked [reps=2, ...]
+    one = jax.tree_util.tree_map(lambda x: x[0], layer)
+    B, W = 2, 1
+    pt = jnp.asarray([[3], [2]], jnp.int32)   # last page owned by seq 0
+    cache = {"k_pages": one["k_pages"], "v_pages": one["v_pages"],
+             "page_table": pt, "seq_lens": jnp.zeros((B,), jnp.int32),
+             "num_new": jnp.asarray([2, 0], jnp.int32)}   # seq 1 inactive
+    k = jnp.ones((B, cfg.n_kv, 2, cfg.hd), jnp.float32)
+    new = paged_append_kv(cache, k, 2.0 * k)
+    # seq 1 wrote nothing anywhere: pages 1, 2 and the garbage page stay 0
+    bits = new["k_pages"].bits
+    assert (bits[2] == 0).all() and (bits[1] == 0).all()
+    assert (bits[3][:, :2] != 0).any()        # seq 0's write landed
+    assert int(new["seq_lens"][1]) == 0
+
+
+@pytest.mark.parametrize("pcfg", [None, P16_2], ids=["float", "p16"])
+def test_dense_chunked_prefill_no_clobber(pcfg):
+    """append_kv's prefill-sized fast path used to write at static offset
+    0, clobbering earlier tokens when a chunked prefill hit a part-full
+    cache (appends are one masked-write path now)."""
+    rng = np.random.default_rng(0)
+    cache = init_cache(2, 2, 16, 8, pcfg)
+    k = jnp.asarray(rng.normal(size=(2, 2, 12, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 12, 8)), jnp.float32)
+    whole = append_kv(cache, k, v)
+    # prefill-sized chunks (6*4 >= 16) into a part-full cache
+    chunked = append_kv(cache, k[:, :, :6], v[:, :, :6])
+    chunked = append_kv(chunked, k[:, :, 6:], v[:, :, 6:])
+    k1, v1 = materialize_kv(whole)
+    k2, v2 = materialize_kv(chunked)
+    assert int(chunked["length"]) == 12
+    assert jnp.array_equal(k1, k2) and jnp.array_equal(v1, v2)
+
+
+def _engine_model():
+    cfg = _cfg(P16_2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0, cfg.vocab)
+    return params, cfg, prompts
+
+
+def test_engine_matches_dense_generate():
+    params, cfg, prompts = _engine_model()
+    max_new = 8
+    dense = np.asarray(E.generate(params, cfg, prompts, max_new, max_len=32))
+    eng = E.PagedServingEngine(params, cfg, max_seqs=4, page_size=4,
+                               table_width=8, prefill_chunk=8)
+    res = eng.run([(np.asarray(prompts[i]), max_new) for i in range(4)])
+    for i in range(4):
+        assert np.array_equal(res[i], dense[i]), i
+
+
+def test_engine_slot_reuse_more_requests_than_slots():
+    params, cfg, prompts = _engine_model()
+    max_new = 8
+    dense = np.asarray(E.generate(params, cfg, prompts, max_new, max_len=32))
+    eng = E.PagedServingEngine(params, cfg, max_seqs=2, page_size=4,
+                               table_width=8, prefill_chunk=8)
+    res = eng.run([(np.asarray(prompts[i % 4]), max_new) for i in range(6)])
+    assert sorted(res) == list(range(6))
+    assert eng.stats["finished"] == 6 and eng.active == 0
+    assert len(eng.free_pages) == eng.num_pages - 1   # all pages returned
+    for i in range(6):
+        assert np.array_equal(res[i], dense[i % 4]), i
+
+
+def test_engine_eviction_preserves_outputs():
+    """A pool too small for the full workload forces preemption; evicted
+    requests must resume (prompt + generated so far) and still produce the
+    dense engine's exact tokens."""
+    params, cfg, _ = _engine_model()
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (3, 10), 0,
+                                 cfg.vocab)
+    dense = np.asarray(E.generate(params, cfg, prompts, 12, max_len=32))
+    eng = E.PagedServingEngine(params, cfg, max_seqs=3, page_size=4,
+                               table_width=8, num_pages=10, prefill_chunk=16)
+    res = eng.run([(np.asarray(prompts[i]), 12) for i in range(3)])
+    assert eng.stats["preempted"] >= 1, "workload did not exercise eviction"
+    for i in range(3):
+        assert np.array_equal(res[i], dense[i]), i
+
+
+def test_generate_zero_retrace_across_calls():
+    """generate() used to rebuild its jit wrappers per call; the hoisted
+    steps must not retrace for repeated calls (same shapes, different
+    max_new)."""
+    params, cfg, prompts = _engine_model()
+    E.generate(params, cfg, prompts, 3, max_len=24)
+    before = dict(E.STEP_TRACES)
+    E.generate(params, cfg, prompts, 6, max_len=24)    # longer decode loop
+    E.generate(params, cfg, prompts, 4, max_len=24)
+    after = dict(E.STEP_TRACES)
+    assert after == before, (before, after)
+
+
+def test_paged_engine_zero_retrace_steady_state():
+    params, cfg, prompts = _engine_model()
+    eng = E.PagedServingEngine(params, cfg, max_seqs=4, page_size=4,
+                               table_width=8, prefill_chunk=8)
+    eng.run([(np.asarray(prompts[i]), 4) for i in range(4)])
+    before = dict(E.STEP_TRACES)
+    # same engine, new traffic: no new traces at all (finished accumulates
+    # across runs, so the second drain reports rids 0..7)
+    eng2_res = eng.run([(np.asarray(prompts[i]), 4) for i in range(4)])
+    assert sorted(eng2_res) == list(range(8))
+    # a fresh engine shares the per-config jitted step: still no retrace
+    eng3 = E.PagedServingEngine(params, cfg, max_seqs=4, page_size=4,
+                                table_width=8, prefill_chunk=8)
+    eng3.run([(np.asarray(prompts[i]), 4) for i in range(4)])
+    after = dict(E.STEP_TRACES)
+    assert after == before, (before, after)

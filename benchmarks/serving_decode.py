@@ -30,6 +30,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
                             "BENCH_serving.json")
+SHARDED_RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                    "experiments",
+                                    "BENCH_serving_sharded.json")
 
 
 def make_workload(n_req: int, min_len: int, max_len: int, min_new: int,
@@ -172,6 +175,80 @@ def bench_all(smoke: bool = False, posit: str = "p16") -> dict:
     }
 
 
+# --------------------------------------------------------------------------
+# sharded serving: tok/s vs device count (each count in its own subprocess —
+# jax locks the host device count at first backend init)
+# --------------------------------------------------------------------------
+def _sharded_worker(devices: int, smoke: bool, posit: str) -> dict:
+    """Runs inside a subprocess whose XLA_FLAGS already forced `devices`
+    CPU host devices: one paged-engine drain on a (devices, 1) data-
+    parallel mesh (TP over CPU psums is pure overhead; the DP axis is the
+    throughput story), warmup pass excluded."""
+    from repro.launch.mesh import make_serving_mesh
+    params, cfg = _bench_model(posit=posit)
+    if smoke:
+        n_req, min_len, max_len, batch = 16, 64, 512, 8
+        page_size, prefill_chunk, max_new = 32, 128, 12
+    else:
+        n_req, min_len, max_len, batch = 32, 128, 4096, 8
+        page_size, prefill_chunk, max_new = 64, 512, 32
+    reqs = make_workload(n_req, min_len, max_len, max_new, max_new,
+                         cfg.vocab)
+    table_width = -(-(max_len + max_new) // page_size)
+    mesh = make_serving_mesh(devices, 1) if devices > 1 else None
+    n_tok = sum(m for _, m in reqs)
+    # warmup (compiles every bucket width), then interleaved best-of-2
+    run_paged_mesh(params, cfg, reqs, batch, page_size, table_width,
+                   prefill_chunk, mesh)
+    t = min(run_paged_mesh(params, cfg, reqs, batch, page_size, table_width,
+                           prefill_chunk, mesh) for _ in range(2))
+    return {"devices": devices, "tok_s": round(n_tok / t, 2)}
+
+
+def run_paged_mesh(params, cfg, reqs, batch, page_size, table_width,
+                   prefill_chunk, mesh) -> float:
+    from repro.serving.engine import PagedServingEngine
+    eng = PagedServingEngine(params, cfg, max_seqs=batch,
+                             page_size=page_size, table_width=table_width,
+                             prefill_chunk=prefill_chunk, mesh=mesh)
+    t0 = time.time()
+    eng.run(list(reqs))
+    return time.time() - t0
+
+
+def bench_sharded(smoke: bool = False, posit: str = "p16",
+                  device_counts=(1, 2, 4, 8)) -> dict:
+    """tok/s vs device count for the mesh-sharded paged engine (the CI
+    nightly artifact BENCH_serving_sharded.json).  On CPU the DP shards
+    share physical cores, so this tracks scheduler/collective overhead
+    rather than real speedup — the trend of interest is tok/s *not
+    collapsing* as the mesh widens."""
+    import subprocess
+    rows = []
+    for n in device_counts:
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={n}",
+                   PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+        cmd = [sys.executable, "-m", "benchmarks.serving_decode",
+               "--sharded-worker", str(n), "--posit", posit]
+        if smoke:
+            cmd.append("--smoke")
+        out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                             cwd=os.path.join(os.path.dirname(__file__),
+                                              ".."))
+        if out.returncode != 0:
+            raise RuntimeError(f"sharded worker ({n} devices) failed:\n"
+                               f"{out.stderr[-2000:]}")
+        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    res = {"smoke": smoke, "posit": posit, "rows": rows}
+    os.makedirs(os.path.dirname(SHARDED_RESULTS_PATH), exist_ok=True)
+    with open(SHARDED_RESULTS_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"wrote {os.path.normpath(SHARDED_RESULTS_PATH)}")
+    return res
+
+
 def run(report):
     """benchmarks.run entry point."""
     t0 = time.time()
@@ -191,7 +268,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--posit", choices=["off", "p8", "p16"], default="p16")
+    ap.add_argument("--sharded", action="store_true",
+                    help="tok/s vs device count for the mesh-sharded "
+                         "engine (subprocess per count)")
+    ap.add_argument("--sharded-worker", type=int, default=None,
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.sharded_worker is not None:
+        print(json.dumps(_sharded_worker(args.sharded_worker, args.smoke,
+                                         args.posit)))
+        return
+    if args.sharded:
+        print(json.dumps(bench_sharded(smoke=args.smoke, posit=args.posit),
+                         indent=1))
+        return
     res = bench_all(smoke=args.smoke, posit=args.posit)
     print(json.dumps(res, indent=1))
     _write(res)

@@ -65,6 +65,91 @@ def compressed_grad_sync(grads, axis_name: str, cfg: PositConfig | None):
         lambda g: compressed_psum(g, axis_name, cfg), grads)
 
 
+# --------------------------------------------------------------------------
+# tensor-parallel serving context (used inside the sharded paged step)
+# --------------------------------------------------------------------------
+# The sharded serving step (serving.engine._sharded_paged_step) runs the
+# whole forward inside one shard_map with Megatron column/row-parallel
+# weights (distributed.sharding.serving_param_pspecs).  The model blocks
+# need two pieces of information the param tree cannot carry: the TP axis
+# name (for the one psum each block owes after its row-parallel output
+# projection) and whether the vocab dimension is sharded (the embedding
+# lookup becomes masked-local + psum, and sampling must reduce across vocab
+# shards).  Both travel through this thread-local context, active only
+# while the step body is being traced — training and single-device serving
+# never see it.
+import contextlib
+import dataclasses
+import threading
+
+_TP = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class TPContext:
+    axis: str                       # mesh axis name ("model")
+    size: int                       # static axis size
+    vocab_sharded: bool             # embed/unembed tables vocab-parallel?
+    compress: PositConfig | None    # posit wire format for block psums
+
+
+@contextlib.contextmanager
+def tensor_parallel(axis: str, size: int, vocab_sharded: bool = False,
+                    compress: PositConfig | None = None):
+    prev = getattr(_TP, "ctx", None)
+    _TP.ctx = TPContext(axis, size, vocab_sharded, compress) \
+        if size > 1 else None
+    try:
+        yield
+    finally:
+        _TP.ctx = prev
+
+
+def tp_ctx() -> TPContext | None:
+    return getattr(_TP, "ctx", None)
+
+
+def block_psum(x):
+    """The one all-reduce a row-parallel block output owes under TP.
+
+    Identity outside a tensor_parallel context.  With a compress format the
+    gather half of the psum moves posit ints instead of f32 (profitable on
+    slow inter-chip links, at the cost of the half-ulp wire quantization —
+    serving keeps it off by default to preserve single-device bit-parity).
+    """
+    ctx = tp_ctx()
+    if ctx is None:
+        return x
+    if ctx.compress is not None:
+        return compressed_psum(x, ctx.axis, ctx.compress)
+    return jax.lax.psum(x, ctx.axis)
+
+
+def sharded_argmax(logits: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Global greedy token ids from vocab-sharded logits [B, V/ntp].
+
+    Each member reduces its local shard to (max, argmax) and only the
+    O(B) pairs cross the mesh — never the [B, vocab] logits.  Ties break
+    to the lowest global index (vocab order == shard order, and argmax
+    picks the first occurrence at both levels), so the result is exactly
+    jnp.argmax of the unsharded logits.
+    """
+    local_v = logits.shape[-1]
+    off = jax.lax.axis_index(axis_name) * local_v
+    lmax = logits.max(axis=-1)                               # [B]
+    larg = jnp.argmax(logits, axis=-1).astype(jnp.int32) + off
+    gmax = jax.lax.all_gather(lmax, axis_name)               # [ntp, B]
+    garg = jax.lax.all_gather(larg, axis_name)               # [ntp, B]
+    shard = jnp.argmax(gmax, axis=0)                         # first max wins
+    return jnp.take_along_axis(garg, shard[None, :], axis=0)[0]
+
+
+def gather_vocab_shards(logits: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """[B, V/ntp] vocab-sharded logits -> full [B, V] on every member (the
+    temperature-sampling path; greedy uses sharded_argmax and stays O(B))."""
+    return jax.lax.all_gather(logits, axis_name, axis=1, tiled=True)
+
+
 def cross_pod_grad_sync(grads, cfg: PositConfig | None, mesh,
                         in_specs, data_axis: str = "data",
                         pod_axis: str = "pod"):

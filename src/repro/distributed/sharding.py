@@ -169,6 +169,54 @@ def _fsdp_param_pspecs(params, mesh):
     return jax.tree_util.tree_map_with_path(assign, params)
 
 
+def serving_param_pspecs(params, mesh):
+    """Megatron inference-TP specs for the sharded paged serving step.
+
+    Column/row-parallel weights over 'model' (one psum per block, applied
+    by the blocks under distributed.collectives.tensor_parallel), vocab-
+    parallel embed/unembed when the vocab divides.  Replicated over 'data':
+    serving holds no optimizer state, so there is nothing to FSDP — every
+    data-parallel replica reads the same (posit-narrow) weights.  Reuses
+    the training rules with the FSDP placeholder dropped to replication,
+    plus column-parallel qkv/gate bias sharding (training replicates
+    biases; under TP a column-parallel output needs its bias shard-local).
+    """
+    extra = [(r"(wq|wk|wv|wg|w_up|w_gate|wr)/b$", ("model",))]
+    rules = [(re.compile(pat), spec) for pat, spec in extra + _rules()]
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        for pat, trailing in rules:
+            if pat.search(ps):
+                tr = tuple(None if a == FSDP else a for a in trailing)
+                return _fit(tr, leaf.shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def paged_pool_pspecs(pages, mesh):
+    """Paged KV pool specs: the page dim shards over 'data' (each DP shard
+    owns a private sub-pool with its own garbage page — the host scheduler
+    in serving.engine allocates shard-locally), kv heads over 'model' when
+    they divide (the TP attention heads live next to their pages).  Leaves
+    are [num_pages, n_kv, page, D], with a leading stacked-reps dim for
+    scanned layer groups."""
+    from repro.core.array import PositArray
+
+    def assign(leaf):
+        spec = [None] * leaf.ndim
+        spec[leaf.ndim - 4] = "data"
+        if leaf.shape[leaf.ndim - 3] % _axis_size(mesh, "model") == 0:
+            spec[leaf.ndim - 3] = "model"
+        return P(*spec)
+
+    # stop at PositArray (one spec covers its bits leaf): the spec tree
+    # stays a plain-P prefix tree usable by shard_map and device_put alike
+    return jax.tree_util.tree_map(
+        assign, pages, is_leaf=lambda x: isinstance(x, PositArray))
+
+
 def opt_state_pspecs(opt_state, param_specs, mesh):
     """Moments mirror parameter sharding; step is replicated."""
     return {

@@ -73,7 +73,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
                          m_ref, l_ref, acc_ref, *, cfg_kv, n_kv, groups,
-                         page, n_pages, scale):
+                         page, n_pages, scale, window):
     """One (sequence, page) cell of the paged decode grid.
 
     The page index was resolved by the BlockSpec index_map from the
@@ -106,7 +106,13 @@ def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
                             preferred_element_type=jnp.float32) * scale
     kpos = j * page + jax.lax.broadcasted_iota(jnp.int32,
                                                (n_kv, groups, page), 2)
-    s = jnp.where(kpos < sl_ref[b], s, _NEG)
+    valid = kpos < sl_ref[b]
+    if window is not None:
+        # local attention: the query sits at position sl-1 (the cache is
+        # post-append), so it sees kpos in (sl-1-window, sl) — identical to
+        # the blockwise decode path's `qpos - kpos < window` mask
+        valid = valid & (kpos > sl_ref[b] - 1 - window)
+    s = jnp.where(valid, s, _NEG)
 
     m_prev = m_ref[...][:, :, :1]                     # (n_kv, groups, 1)
     m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
@@ -126,11 +132,12 @@ def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = out.reshape(n_kv * groups, d)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg_kv", "interpret"))
+@functools.partial(jax.jit, static_argnames=("cfg_kv", "window", "interpret"))
 def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
                        v_pages: jnp.ndarray, page_table: jnp.ndarray,
                        seq_lens: jnp.ndarray, *,
                        cfg_kv: PositConfig | None = None,
+                       window: int | None = None,
                        interpret: bool = False) -> jnp.ndarray:
     """Fused paged-gather decode attention (the continuous-batching hot path).
 
@@ -141,6 +148,10 @@ def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
     pages a sequence owns — the dense `materialize_kv` copy never exists.
     Positions >= seq_lens[b] (garbage-page tails, unallocated entries) are
     masked.  GQA: H = n_kv * groups, query head h reads kv head h // groups.
+    window: sliding-window (local-attention) size — the decode query at
+    position seq_lens[b]-1 attends only the last `window` tokens.  Pages
+    entirely outside the window still stream (the grid is static over W);
+    their scores are masked to -inf, matching the gathered reference.
     """
     bh, H, d = q.shape
     n_pages_total, n_kv, page, _ = k_pages.shape
@@ -168,7 +179,8 @@ def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
     )
     return pl.pallas_call(
         functools.partial(_paged_decode_kernel, cfg_kv=cfg_kv, n_kv=n_kv,
-                          groups=groups, page=page, n_pages=W, scale=scale),
+                          groups=groups, page=page, n_pages=W, scale=scale,
+                          window=window),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bh, H, d), jnp.float32),
         interpret=interpret,

@@ -23,3 +23,28 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh for single-device runs (tests/examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serving_mesh(data: int | None = None, model: int = 1):
+    """("data", "model") mesh over the locally visible devices for the
+    sharded paged serving step (serving.engine.PagedServingEngine(mesh=...)).
+
+    data=None: all devices not claimed by `model` go to data parallelism.
+    Unlike make_production_mesh this takes whatever jax.devices() offers
+    (a TPU slice, or a forced-CPU host via
+    XLA_FLAGS=--xla_force_host_platform_device_count=N), and may use a
+    prefix subset of the devices.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    if model < 1:
+        raise ValueError(f"model axis must be >= 1, got {model}")
+    if data is None:
+        data = len(devs) // model
+    n = data * model
+    if n < 1 or n > len(devs):
+        raise ValueError(f"mesh ({data}, {model}) needs {n} devices, "
+                         f"have {len(devs)}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(data, model),
+                             ("data", "model"))

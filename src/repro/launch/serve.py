@@ -8,6 +8,10 @@
     python -m repro.launch.serve --arch smollm-360m --smoke --engine paged \
         --batch 4 --prompt-len 32 --max-new 16 --posit p16 --requests 16
 
+    # mesh-sharded paged serving (data x model axes; here 8-way forced-CPU)
+    python -m repro.launch.serve --arch smollm-360m --smoke --engine paged \
+        --batch 8 --mesh 4x2 --host-devices 8
+
 Runs PTQ (quant/ptq.py) on freshly-initialized (or checkpointed) weights,
 then serves synthetic traffic.  The paged engine draws mixed prompt lengths
 in [prompt-len/4, prompt-len] so admission/retirement actually interleave.
@@ -15,6 +19,7 @@ in [prompt-len/4, prompt-len] so admission/retirement actually interleave.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 
@@ -35,7 +40,21 @@ def main():
                     help="paged: total requests to serve (default 2*batch)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="paged: shard the serving step over a "
+                         "(data, model) mesh, e.g. 4x2")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N CPU host devices (sets XLA_FLAGS; must "
+                         "run before jax initializes)")
     args = ap.parse_args()
+
+    if args.host_devices:
+        # append (not prepend): XLA applies the *last* duplicate flag, so an
+        # inherited force_host_platform_device_count must not win over the
+        # explicit request
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.host_devices}")
 
     import numpy as np
     import jax
@@ -79,6 +98,13 @@ def main():
         return
 
     # paged continuous batching: mixed-length synthetic traffic
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+        d, m = (int(v) for v in args.mesh.lower().split("x"))
+        mesh = make_serving_mesh(d, m)
+        print(f"[serve] mesh: data={d} x model={m} over "
+              f"{d * m} {jax.devices()[0].platform} devices")
     n_req = args.requests or 2 * args.batch
     rng = np.random.default_rng(1)
     cap = args.prompt_len + args.max_new
@@ -86,7 +112,7 @@ def main():
     eng = PagedServingEngine(
         params, cfg, max_seqs=args.batch, page_size=args.page_size,
         table_width=width, prefill_chunk=args.prefill_chunk,
-        temperature=args.temperature)
+        temperature=args.temperature, mesh=mesh)
     reqs = []
     for _ in range(n_req):
         plen = int(rng.integers(max(1, args.prompt_len // 4),

@@ -293,6 +293,15 @@ def attention_block(x, p: Params, *, n_heads: int, n_kv: int, head_dim: int,
     fused in the Pallas kernel on TPU) — the format rides with the pages, so
     nothing here re-states it.
     """
+    from repro.distributed.collectives import block_psum, tp_ctx
+    ctx = tp_ctx()
+    if ctx is not None:
+        # Megatron TP (sharded serving step): wq/wk/wv are column-parallel,
+        # so this member computes its n_heads/ntp heads (and n_kv/ntp kv
+        # heads, whose pages live on the same member); wo is row-parallel
+        # and owes the block's one psum below.
+        n_heads //= ctx.size
+        n_kv //= ctx.size
     B, S, _ = x.shape
     q = linear(x, p["wq"], policy).reshape(B, S, n_heads, head_dim)
     k = linear(x, p["wk"], policy).reshape(B, S, n_kv, head_dim)
@@ -316,7 +325,7 @@ def attention_block(x, p: Params, *, n_heads: int, n_kv: int, head_dim: int,
                               q_offset=q_offset, window=window,
                               softcap=softcap)
         out = out.transpose(0, 2, 1, 3).reshape(B, S, n_heads * head_dim)
-        return linear(out, p["wo"], policy), new_cache
+        return block_psum(linear(out, p["wo"], policy)), new_cache
     if kv_cache is not None:
         from repro.serving.kv_cache import append_kv
         q_offset = kv_cache["length"]               # traced scalar
@@ -338,7 +347,7 @@ def attention_block(x, p: Params, *, n_heads: int, n_kv: int, head_dim: int,
                               softcap=softcap, kv_len=kv_len,
                               cfg_kv=legacy_cfg)
     out = out.transpose(0, 2, 1, 3).reshape(B, S, n_heads * head_dim)
-    return linear(out, p["wo"], policy), new_cache
+    return block_psum(linear(out, p["wo"], policy)), new_cache
 
 
 # --------------------------------------------------------------------------
@@ -365,7 +374,10 @@ def mlp_block(x, p: Params, *, act: str, policy: PositPolicy):
         h = jax.nn.relu(up)
     else:
         raise ValueError(act)
-    return linear(h, p["w_down"], policy)
+    # under TP (sharded serving) w_up/w_gate are column-parallel over d_ff
+    # and w_down row-parallel: the partial product owes the block's one psum
+    from repro.distributed.collectives import block_psum
+    return block_psum(linear(h, p["w_down"], policy))
 
 
 # --------------------------------------------------------------------------
@@ -378,6 +390,29 @@ def init_embedding(key, vocab: int, d_model: int) -> Params:
 
 def embed(tokens, p: Params, policy: PositPolicy):
     t = p["table"]
+    from repro.distributed.collectives import tp_ctx
+    ctx = tp_ctx()
+    if ctx is not None and ctx.vocab_sharded:
+        # Megatron vocab-parallel embedding: this member holds rows
+        # [off, off + v_local); out-of-range tokens gather a masked zero row
+        # and the psum assembles each embedding from exactly one nonzero
+        # member — 0 + x is exact, so logits stay bit-identical to the
+        # unsharded lookup.
+        v_local = t.shape[0]
+        local = tokens - jax.lax.axis_index(ctx.axis) * v_local
+        ok = (local >= 0) & (local < v_local)
+        idx = jnp.clip(local, 0, v_local - 1)
+        if isinstance(t, PositArray):
+            rows = t[idx].to_f32()
+        elif t.dtype in (jnp.int8, jnp.int16):
+            from repro.core.decode import decode_to_f32
+            rows = decode_to_f32(jnp.take(t, idx, axis=0), policy.weights)
+        else:
+            if policy is not None and policy.weights is not None:
+                t = posit_cast_ste(t, policy.weights)
+            rows = jnp.take(t, idx, axis=0)
+        rows = jnp.where(ok[..., None], rows, 0.0)
+        return jax.lax.psum(rows, ctx.axis)
     if isinstance(t, PositArray):
         # Light-PPU use case [9]: posit storage of tables, decode after
         # gather — the table knows its own format

@@ -21,6 +21,14 @@ to powers of two over the *participating* slots only (a short prompt's
 prefill chunks never pay a 4k-token neighbor's width; bounded extra traces,
 one per bucket), and admissions are batched so one prefill stall amortizes
 over several waiting prompts instead of interrupting decode per freed slot.
+
+Sampling happens on device inside the jitted step (greedy argmax or
+jax.random temperature sampling): a step's device->host traffic is the
+[max_seqs] int32 sampled tokens, never the [max_seqs, vocab] logits.  With
+a `mesh`, the step becomes one shard_map over ("data", "model"): sequence
+slots/pages data-parallel, weights Megatron tensor-parallel (see
+_sharded_paged_step) — the host scheduler is a pure page/slot bookkeeper
+and is identical in both modes.
 """
 from __future__ import annotations
 
@@ -66,7 +74,13 @@ def _dense_steps(cfg: ModelConfig):
     generate() used to rebuild `jax.jit(lambda ...)` wrappers per call,
     which made every call (and every distinct max_new via the fresh cache
     shape) retrace.  The lru_cache keys the jitted objects on the hashable
-    ModelConfig, so steady-state serving reuses one trace per shape."""
+    ModelConfig, so steady-state serving reuses one trace per shape.
+
+    The cache argument is donated: without it every dense step held the
+    previous *and* the next KV cache live in HBM (2x the cache footprint,
+    while the paged step already donated its pool); with donation XLA
+    aliases the output cache onto the input buffers, asserted by
+    tests/test_serving_paged.py::test_dense_steps_donate_cache_buffers."""
     def pf(p, t, c):
         STEP_TRACES[("dense_prefill", cfg.name)] += 1
         return prefill_step(p, cfg, t, c)
@@ -75,7 +89,8 @@ def _dense_steps(cfg: ModelConfig):
         STEP_TRACES[("dense_decode", cfg.name)] += 1
         return decode_step(p, cfg, t, c)
 
-    return jax.jit(pf), jax.jit(dc)
+    return (jax.jit(pf, donate_argnums=(2,)),
+            jax.jit(dc, donate_argnums=(2,)))
 
 
 def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, max_new: int,
@@ -104,20 +119,121 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, max_new: int,
 # ==========================================================================
 # continuous batching over the paged pool
 # ==========================================================================
-@functools.lru_cache(maxsize=64)
-def _paged_step(cfg: ModelConfig):
-    """The fused paged serving step, jitted once per model config and shared
-    by every engine instance (a per-engine jit would recompile identical
-    shapes for each engine — e.g. one per benchmark repetition)."""
-    def step(p, tokens, pages, pt, sl, nn):
-        STEP_TRACES[("paged_step", cfg.name, tokens.shape[1],
-                     pt.shape[1])] += 1
+def _sample_on_device(last, *, greedy: bool, temperature, seed, step_idx,
+                      slot_offset, tp_axis: str | None = None,
+                      vocab_sharded: bool = False):
+    """Sample next tokens [B] int32 from last-position logits, inside the
+    jitted step — the host never sees a [B, vocab] array (the old engine
+    pulled the full logits to numpy every decode step, a blocking
+    device->host sync on the hottest loop; serving.engine._sample_host
+    survives only as the tests' parity oracle).
+
+    Keyed fold_in(fold_in(PRNGKey(seed), step), global_slot): slot_offset
+    is this shard's first global slot id, so the data-sharded step draws
+    the same per-slot streams as the single-device one.  Vocab-sharded
+    logits (TP unembed) reduce via sharded_argmax (O(B) ints cross the
+    mesh) for greedy; temperature gathers the vocab shards first.
+    """
+    if greedy:
+        if vocab_sharded:
+            from repro.distributed.collectives import sharded_argmax
+            return sharded_argmax(last, tp_axis)
+        return jnp.argmax(last, axis=-1).astype(jnp.int32)
+    if vocab_sharded:
+        from repro.distributed.collectives import gather_vocab_shards
+        last = gather_vocab_shards(last, tp_axis)
+    B = last.shape[0]
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step_idx)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        key, slot_offset + jnp.arange(B))
+    logits = last / jnp.maximum(temperature, 1e-6)
+    return jax.vmap(jax.random.categorical)(keys, logits).astype(jnp.int32)
+
+
+def _step_body(cfg: ModelConfig, greedy: bool, p, tokens, pages, pt, sl, nn,
+               temp, seed, step_idx, *, slot_offset=0, tp_size: int = 1,
+               vocab_sharded: bool = False, compress=None):
+    """The paged serving step, shared verbatim by the single-device and the
+    mesh-sharded builders (under shard_map the tensor_parallel context and
+    the shard's slot_offset are the only differences — keeping one body
+    means a sampling or last-position fix cannot diverge between them)."""
+    from repro.distributed.collectives import tensor_parallel
+
+    with tensor_parallel("model", tp_size, vocab_sharded, compress):
         caches = assemble_paged_caches(pages, pt, sl, nn)
         logits, _, new_caches = forward(p, cfg, tokens=tokens, caches=caches)
-        # last *valid* position per slot (ragged prefill chunks)
-        idx = jnp.clip(nn - 1, 0, tokens.shape[1] - 1)
-        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
-        return last, extract_paged_pages(new_caches)
+    # last *valid* position per slot (ragged prefill chunks)
+    idx = jnp.clip(nn - 1, 0, tokens.shape[1] - 1)
+    last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    toks = _sample_on_device(last, greedy=greedy, temperature=temp,
+                             seed=seed, step_idx=step_idx,
+                             slot_offset=slot_offset,
+                             tp_axis="model" if tp_size > 1 else None,
+                             vocab_sharded=vocab_sharded)
+    return toks, extract_paged_pages(new_caches)
+
+
+@functools.lru_cache(maxsize=64)
+def _paged_step(cfg: ModelConfig, greedy: bool = True):
+    """The fused paged serving step, jitted once per (model config, sampling
+    mode) and shared by every engine instance (a per-engine jit would
+    recompile identical shapes for each engine — e.g. one per benchmark
+    repetition).  Returns ([max_seqs] int32 sampled tokens, new pages) —
+    token ids are the only device->host traffic a step produces."""
+    def step(p, tokens, pages, pt, sl, nn, temp, seed, step_idx):
+        STEP_TRACES[("paged_step", cfg.name, tokens.shape[1],
+                     pt.shape[1])] += 1
+        return _step_body(cfg, greedy, p, tokens, pages, pt, sl, nn, temp,
+                          seed, step_idx)
+
+    return jax.jit(step, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_paged_step(cfg: ModelConfig, mesh, greedy: bool = True,
+                        compress=None):
+    """The mesh-sharded paged serving step: one shard_map over the
+    ("data", "model") mesh, jitted once per (config, mesh, sampling mode).
+
+    data axis:  sequence slots — tokens/page_table/seq_lens/num_new rows
+        and a private page sub-pool per shard (the host scheduler allocates
+        shard-locally, so table entries are local page ids everywhere).
+    model axis: Megatron TP — column/row-parallel weights per
+        distributed.sharding.serving_param_pspecs, kv-head-sharded pages,
+        one psum per block (posit-compressed via `compress`, off by default
+        to keep single-device bit-parity), vocab-parallel embed/unembed
+        when the vocab divides.
+
+    Sampling runs on device inside the shard_map (a host round-trip per
+    token would serialize the mesh): the step returns only the [max_seqs]
+    int32 token ids, data-sharded like the slots.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import (paged_pool_pspecs,
+                                            serving_param_pspecs)
+
+    ndata, ntp = mesh.shape["data"], mesh.shape["model"]
+    vocab_sharded = ntp > 1 and cfg.vocab % ntp == 0
+
+    def body(p, tokens, pages, pt, sl, nn, temp, seed, step_idx):
+        STEP_TRACES[("sharded_paged_step", cfg.name, ndata, ntp,
+                     tokens.shape[1], pt.shape[1])] += 1
+        return _step_body(
+            cfg, greedy, p, tokens, pages, pt, sl, nn, temp, seed, step_idx,
+            slot_offset=jax.lax.axis_index("data") * tokens.shape[0],
+            tp_size=ntp, vocab_sharded=vocab_sharded, compress=compress)
+
+    def step(p, tokens, pages, pt, sl, nn, temp, seed, step_idx):
+        data_rows = P("data", None)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(serving_param_pspecs(p, mesh), data_rows,
+                      paged_pool_pspecs(pages, mesh), data_rows,
+                      P("data"), P("data"), P(), P(), P()),
+            out_specs=(P("data"), paged_pool_pspecs(pages, mesh)),
+            check_rep=False,
+        )(p, tokens, pages, pt, sl, nn, temp, seed, step_idx)
 
     return jax.jit(step, donate_argnums=(2,))
 
@@ -161,12 +277,23 @@ class PagedServingEngine:
     max_seqs:     sequence slots (the fused step's batch dimension)
     page_size:    tokens per KV page
     table_width:  max pages per sequence (caps sequence length)
-    num_pages:    pool size; default fits max_seqs full-length sequences
+    num_pages:    total pool size; default fits max_seqs full-length
+        sequences (+1 garbage page per data shard)
     prefill_chunk: prompt tokens written per prefill step (fixed shape)
     admit_threshold: batch admissions — hold freed slots until this many
         are free (or nothing is decoding / a prefill phase is already
         running) so one prefill stall amortizes over several prompts;
         default max_seqs // 2, 0 = admit eagerly
+    mesh:         a ("data", "model") jax Mesh (launch.mesh) — the fused
+        step becomes one shard_map over it: sequence slots, page tables and
+        a private page sub-pool per data shard; Megatron-TP weights and
+        kv-head-sharded pages over the model axis; sampling stays on device
+        (the step moves O(max_seqs) ints, never logits).  None (default):
+        the single-device step, unchanged.
+    tp_compress:  optional PositConfig — posit-compress the gather half of
+        the per-block TP psums (distributed.collectives).  Profitable on
+        slow inter-chip links; costs the wire quantization, so exact
+        single-device parity holds only when off.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_seqs: int = 8,
@@ -174,7 +301,8 @@ class PagedServingEngine:
                  num_pages: int | None = None, prefill_chunk: int = 128,
                  temperature: float = 0.0, seed: int = 0,
                  bucket_pages: bool = True,
-                 admit_threshold: int | None = None):
+                 admit_threshold: int | None = None,
+                 mesh=None, tp_compress=None):
         self.params, self.cfg = params, cfg
         self.max_seqs, self.page = max_seqs, page_size
         self.width = table_width
@@ -183,12 +311,53 @@ class PagedServingEngine:
         self.bucket_pages = bucket_pages
         self.admit_threshold = (max_seqs // 2 if admit_threshold is None
                                 else admit_threshold)
-        num_pages = num_pages or (max_seqs * table_width + 1)
+        self.mesh = mesh
+        if mesh is not None:
+            ndata, ntp = mesh.shape["data"], mesh.shape["model"]
+            if max_seqs % ndata != 0:
+                raise ValueError(f"max_seqs={max_seqs} must divide over the "
+                                 f"data axis ({ndata})")
+            for dim, nm in ((cfg.n_heads, "n_heads"), (cfg.n_kv, "n_kv"),
+                            (cfg.d_ff, "d_ff")):
+                if dim % ntp != 0:
+                    raise ValueError(f"cfg.{nm}={dim} must divide the model "
+                                     f"axis ({ntp}) for TP serving")
+            if cfg.moe is not None and ntp > 1:
+                raise ValueError("TP over MoE blocks is not supported in "
+                                 "the sharded serving step; use model=1")
+            self.n_shards = ndata
+        else:
+            self.n_shards = 1
+        self.slots_per_shard = max_seqs // self.n_shards
+        if num_pages is None:
+            num_pages = self.n_shards * (self.slots_per_shard * table_width
+                                         + 1)
+        if num_pages % self.n_shards != 0:
+            raise ValueError(f"num_pages={num_pages} must divide over the "
+                             f"data axis ({self.n_shards})")
         self.num_pages = num_pages
+        self.pages_per_shard = num_pages // self.n_shards
         self.pages = init_paged_pages(cfg, num_pages, page_size,
                                       dtype=jnp.dtype(cfg.dtype))
-        # host scheduler state; page 0 is the reserved garbage page
-        self.free_pages = list(range(num_pages - 1, 0, -1))
+        if mesh is not None:
+            from repro.distributed.sharding import (paged_pool_pspecs,
+                                                    serving_param_pspecs,
+                                                    to_shardings)
+            self.pages = jax.device_put(
+                self.pages,
+                to_shardings(paged_pool_pspecs(self.pages, mesh), mesh))
+            # place the weights per the TP specs once, up front: params
+            # committed to one device would otherwise be resharded onto the
+            # mesh by GSPMD at *every* step call — O(param bytes) per decode
+            # step on the loop this engine keeps at O(max_seqs) ints
+            self.params = jax.device_put(
+                self.params,
+                to_shardings(serving_param_pspecs(self.params, mesh), mesh))
+        # host scheduler state; local page 0 of every shard is its reserved
+        # garbage page, and the table holds *shard-local* page ids (the
+        # device step only ever sees its own sub-pool)
+        self._free = [list(range(self.pages_per_shard - 1, 0, -1))
+                      for _ in range(self.n_shards)]
         self.table = np.zeros((max_seqs, table_width), np.int32)
         self.seq_lens = np.zeros((max_seqs,), np.int32)
         self.slots: list[_Slot | None] = [None] * max_seqs
@@ -196,43 +365,63 @@ class PagedServingEngine:
         self._admitted = 0
         self._next_rid = 0
         self._rng = np.random.default_rng(seed)
+        self._seed = int(seed) % (2 ** 31 - 1)
+        self._step_idx = 0
         self.finished: dict[int, np.ndarray] = {}
         self.stats = collections.Counter()
 
-        self._step_fn = _paged_step(cfg)
+        greedy = temperature <= 0.0
+        if mesh is None:
+            self._step_fn = _paged_step(cfg, greedy)
+        else:
+            self._step_fn = _sharded_paged_step(cfg, mesh, greedy,
+                                                tp_compress)
 
     # ---- host-side paging ------------------------------------------------
+    def _shard(self, i: int) -> int:
+        """Data shard owning sequence slot i (0 when unsharded)."""
+        return i // self.slots_per_shard
+
+    @property
+    def free_pages(self) -> list[int]:
+        """All free (shard-local) page ids, across shards."""
+        return [p for lst in self._free for p in lst]
+
     def _ensure_pages(self, i: int, upto: int):
-        """Slot i needs capacity for `upto` tokens; allocate (and preempt
-        if the pool is dry)."""
+        """Slot i needs capacity for `upto` tokens; allocate from its
+        shard's sub-pool (and preempt within the shard if it runs dry)."""
         slot = self.slots[i]
+        free = self._free[self._shard(i)]
         need = -(-upto // self.page)
         if need > self.width:
             raise ValueError(f"request {slot.req.rid}: {upto} tokens exceed "
                              f"table_width*page_size = {self.width * self.page}")
         while len(slot.pages) < need:
-            if not self.free_pages:
+            if not free:
                 if not self._preempt(exclude=i):
                     raise RuntimeError(
                         "KV pool exhausted and nothing left to preempt; "
                         "grow num_pages or lower max_seqs")
                 continue
-            pg = self.free_pages.pop()
+            pg = free.pop()
             self.table[i, len(slot.pages)] = pg
             slot.pages.append(pg)
 
     def _free_slot(self, i: int):
         slot = self.slots[i]
-        self.free_pages.extend(reversed(slot.pages))
+        self._free[self._shard(i)].extend(reversed(slot.pages))
         self.table[i, :] = 0
         self.seq_lens[i] = 0
         self.slots[i] = None
 
     def _preempt(self, exclude: int) -> bool:
-        """Evict the youngest other sequence: free its pages and requeue it
+        """Evict the youngest other sequence *in the same shard* (pages
+        cannot migrate between sub-pools): free its pages and requeue it
         (prompt + generated so far) at the front of the wait queue."""
+        shard = self._shard(exclude)
         victims = [(s.admit_order, i) for i, s in enumerate(self.slots)
-                   if s is not None and i != exclude]
+                   if s is not None and i != exclude
+                   and self._shard(i) == shard]
         if not victims:
             return False
         _, i = max(victims)
@@ -268,15 +457,18 @@ class PagedServingEngine:
             if self.slots[i] is not None:
                 continue
             req = self.waiting[0]
-            # admit when the prompt (+ first generated token) fits the pool
+            # admit when the prompt (+ first generated token) fits this
+            # slot's shard sub-pool
             need = -(-(len(req.prompt) + 1) // self.page)
-            if need > len(self.free_pages):
-                if self.active == 0:
+            if need > len(self._free[self._shard(i)]):
+                if self.active == 0 and all(
+                        need > len(f) for f in self._free):
                     raise RuntimeError(
                         f"request {req.rid} needs {need} pages but the idle "
-                        f"pool only has {len(self.free_pages)}; grow "
-                        f"num_pages")
-                return
+                        f"pool only has {len(self.free_pages)} "
+                        f"(max {max(len(f) for f in self._free)} in one "
+                        f"shard); grow num_pages")
+                continue
             self.waiting.popleft()
             self.slots[i] = _Slot(req=req, admit_order=self._admitted,
                                   pages=[])
@@ -314,6 +506,9 @@ class PagedServingEngine:
         return sum(s is not None for s in self.slots)
 
     def _sample_host(self, logits_row: np.ndarray) -> int:
+        """Host-side sampling oracle.  The engine samples on device inside
+        the jitted step (_sample_on_device) — this survives only so tests
+        can check greedy parity against independently computed logits."""
         if self.temperature <= 0.0:
             return int(np.argmax(logits_row))
         z = logits_row.astype(np.float64) / self.temperature
@@ -341,14 +536,19 @@ class PagedServingEngine:
         return self.table[:, :w]
 
     def _run_step(self, tokens: np.ndarray, num_new: np.ndarray,
-                  participants):
+                  participants) -> np.ndarray:
+        """Run the fused step; returns the sampled token per slot
+        ([max_seqs] int32 — the step's only device->host transfer)."""
         pt = jnp.asarray(self._table_view(participants))
         sl = jnp.asarray(self.seq_lens)
         nn = jnp.asarray(num_new)
-        logits, self.pages = self._step_fn(
-            self.params, jnp.asarray(tokens), self.pages, pt, sl, nn)
+        toks, self.pages = self._step_fn(
+            self.params, jnp.asarray(tokens), self.pages, pt, sl, nn,
+            jnp.float32(self.temperature), jnp.int32(self._seed),
+            jnp.int32(self._step_idx))
+        self._step_idx += 1
         self.seq_lens += num_new
-        return np.asarray(logits)
+        return np.asarray(toks)
 
     def step(self) -> list[tuple[int, int]]:
         """One scheduler iteration; returns (rid, token) pairs emitted."""
@@ -384,12 +584,12 @@ class PagedServingEngine:
                 part = s.req.prompt[s.prefill_pos:s.prefill_pos + self.chunk]
                 tokens[i, :len(part)] = part
                 num_new[i] = len(part)
-            logits = self._run_step(tokens, num_new, alive)
+            toks = self._run_step(tokens, num_new, alive)
             for i in alive:
                 s = self.slots[i]
                 s.prefill_pos += int(num_new[i])
                 if s.phase == "decode":
-                    tok = self._sample_host(logits[i])
+                    tok = int(toks[i])
                     s.generated.append(tok)
                     s.next_token = tok
                     emitted.append((s.req.rid, tok))
@@ -411,10 +611,10 @@ class PagedServingEngine:
         for i in decoding:
             tokens[i, 0] = self.slots[i].next_token
             num_new[i] = 1
-        logits = self._run_step(tokens, num_new, decoding)
+        toks = self._run_step(tokens, num_new, decoding)
         for i in decoding:
             s = self.slots[i]
-            tok = self._sample_host(logits[i])
+            tok = int(toks[i])
             s.generated.append(tok)
             s.next_token = tok
             emitted.append((s.req.rid, tok))

@@ -160,12 +160,14 @@ def paged_attention(q, cache: dict, *, n_kv: int, causal: bool = True,
                     softcap: float | None = None, interpret: bool = False):
     """Attention over a paged cache.  q: [B, H, Sq, D] float.
 
-    Decode steps (Sq == 1, no window/softcap) take the fused Pallas
-    paged-gather kernel on TPU — pages decode in VMEM right before the MXU,
-    no dense materialization.  Everything else (prefill chunks, windowed
-    attention, the CPU path) gathers the dense view and reuses
-    models.blocks.blockwise_attention, which is bit-identical to the dense
-    engine by construction.
+    Decode steps (Sq == 1, no softcap) take the fused Pallas paged-gather
+    kernel on TPU — pages decode in VMEM right before the MXU, no dense
+    materialization.  Windowed (local-attention) decode also routes here:
+    the kernel masks positions outside the trailing `window` tokens, so
+    griffin/recurrentgemma-style archs keep the paged decode fast path.
+    Everything else (prefill chunks, softcapped attention, the CPU path)
+    gathers the dense view and reuses models.blocks.blockwise_attention,
+    which is bit-identical to the dense engine by construction.
     """
     from repro.kernels import ops as kops
 
@@ -177,14 +179,14 @@ def paged_attention(q, cache: dict, *, n_kv: int, causal: bool = True,
         q_offset = cache["seq_lens"] - cache["num_new"]
     kp = cache["k_pages"]
     posit_pages = isinstance(kp, PositArray)
-    if (Sq == 1 and window is None and softcap is None and kops.use_pallas()):
+    if (Sq == 1 and softcap is None and kops.use_pallas()):
         from repro.kernels.flash_attention import paged_flash_decode
         kbuf = kp.bits if posit_pages else kp
         vbuf = cache["v_pages"].bits if posit_pages else cache["v_pages"]
         out = paged_flash_decode(
             q[:, :, 0, :], kbuf, vbuf, cache["page_table"],
             cache["seq_lens"], cfg_kv=kp.cfg if posit_pages else None,
-            interpret=interpret)
+            window=window, interpret=interpret)
         return out[:, :, None, :].astype(q.dtype)
 
     from repro.models.blocks import blockwise_attention

@@ -105,6 +105,69 @@ def test_paged_flash_decode_vs_materialized_dense_attention(pcfg):
                                        atol=2e-6)
 
 
+@pytest.mark.parametrize("pcfg", [None, P16_2], ids=["float", "p16"])
+@pytest.mark.parametrize("window", [4, 16])
+def test_paged_flash_decode_window_matches_gathered_reference(pcfg, window):
+    """Windowed (local-attention) decode used to fall off the paged kernel
+    onto the dense gather_kv path; the kernel now masks the window itself
+    and must match the gathered blockwise reference at mixed lengths."""
+    from repro.core.convert import f32_to_posit
+    from repro.kernels.flash_attention import paged_flash_decode
+    from repro.models.blocks import blockwise_attention
+
+    rng = np.random.default_rng(11)
+    B, n_kv, G, D, page, W = 3, 2, 2, 16, 8, 4
+    H = n_kv * G
+    seq_lens = jnp.asarray([3, 17, 32], jnp.int32)
+    pt = _sequential_table(B, W)
+    kd = jnp.asarray(rng.normal(size=(1 + B * W, n_kv, page, D)), jnp.float32)
+    vd = jnp.asarray(rng.normal(size=(1 + B * W, n_kv, page, D)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    kp = f32_to_posit(kd, pcfg) if pcfg is not None else kd
+    vp = f32_to_posit(vd, pcfg) if pcfg is not None else vd
+
+    out = paged_flash_decode(q, kp, vp, pt, seq_lens, cfg_kv=pcfg,
+                             window=window, interpret=True)
+
+    if pcfg is not None:
+        from repro.core.array import PositArray
+        cache = {"k_pages": PositArray(kp, pcfg),
+                 "v_pages": PositArray(vp, pcfg), "page_table": pt}
+    else:
+        cache = {"k_pages": kp, "v_pages": vp, "page_table": pt}
+    k, v = gather_kv(cache)
+    ref = blockwise_attention(q[:, :, None, :], k, v, n_kv=n_kv, causal=True,
+                              q_offset=seq_lens - 1, window=window,
+                              kv_len=seq_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref[:, :, 0, :]),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_dense_steps_donate_cache_buffers():
+    """_dense_steps used to jit without donate_argnums, holding two full KV
+    caches live per step; the decode step must now alias the new cache onto
+    the donated input buffers (and invalidate the donated array)."""
+    params, cfg, prompts = _engine_model()
+    pf, dc = E._dense_steps(cfg)
+    caches = init_caches(cfg, 4, 16, dtype=jnp.dtype(cfg.dtype))
+    logits, caches = pf(params, prompts, caches)
+
+    def kbuf(c):
+        k = c["scanned"][0]["k"]
+        return k.bits if hasattr(k, "bits") else k
+
+    kbuf(caches).block_until_ready()
+    ptr = kbuf(caches).unsafe_buffer_pointer()
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    donated = caches
+    logits, caches = dc(params, tok, caches)
+    kbuf(caches).block_until_ready()
+    assert kbuf(caches).unsafe_buffer_pointer() == ptr, \
+        "decode step did not reuse the donated KV buffer"
+    with pytest.raises(RuntimeError):
+        np.asarray(kbuf(donated))            # donated input is dead
+
+
 def test_paged_append_drops_masked_writes_out_of_bounds():
     """Masked scatter rows must vanish, not wrap into the last page (the
     -1-index clobber this PR fixed)."""

@@ -3,8 +3,11 @@
 Each kernel module pairs pl.pallas_call + explicit BlockSpec VMEM tiling
 with a pure-jnp oracle in ref.py; ops.py is the jit'd dispatch layer.
 """
-from repro.kernels.ops import (attention, decode, divide, elementwise, gemm,
-                               encode, pw_matmul, use_pallas)
+from repro.kernels.ops import (attention, decode, divide, elementwise,
+                               encode, flash_prefill, gemm,
+                               paged_prefill_attention, pallas_interpret,
+                               pw_matmul, use_pallas)
 
 __all__ = ["gemm", "pw_matmul", "elementwise", "divide", "decode", "encode",
-           "attention", "use_pallas"]
+           "attention", "flash_prefill", "paged_prefill_attention",
+           "use_pallas", "pallas_interpret"]

@@ -9,6 +9,24 @@ the narrow ints.
 
 Standard online-softmax across KV blocks; supports causal masking with a
 query-position offset (decode steps: q_len << kv_len).
+
+Three fused entry points share the decode-before-the-MXU structure:
+  * flash_attention            — contiguous KV, rectangular batch (training)
+  * paged_flash_decode         — Sq == 1 over the paged pool (serving decode)
+  * paged_flash_prefill /      — Sq >= 1 over the paged pool / a contiguous
+    flash_prefill_contiguous     cache: the chunked-prefill + TTFT hot path.
+                                 One kernel body, two BlockSpec wirings; the
+                                 page table (paged) or the block index
+                                 (contiguous) picks each KV tile, and
+                                 causal/q_offset/window/softcap are masked
+                                 in-kernel, so no `gather_kv` dense
+                                 materialization exists on the TPU path for
+                                 any Sq.
+
+Every grid is tagged with `dimension_semantics`: batch and q-tile axes are
+"parallel" (no cross-iteration state), the KV axis is "arbitrary" (it
+carries the online-softmax running max/sum/acc), which lets Mosaic
+parallelize across cores without breaking the accumulation order.
 """
 from __future__ import annotations
 
@@ -132,6 +150,238 @@ def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = out.reshape(n_kv * groups, d)
 
 
+def _prefill_body(sl_ref, qo_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, cfg_kv, n_kv, groups, bq, bk,
+                  nkv_blocks, scale, causal, window, softcap):
+    """One (sequence, q-tile, kv-tile) cell of the fused prefill grid.
+
+    Shared by the paged entry (the BlockSpec index_map resolved the KV tile
+    from the scalar-prefetched page table) and the contiguous entry (the
+    tile is block j of the dense cache).  Posit KV tiles decode here, in
+    VMEM, right before the dot — the dense f32 view the gather_kv fallback
+    materialized never exists.  GQA keeps the group dim folded into the
+    query rows: q is (n_kv, groups*bq, d) so one batched dot per kv head
+    feeds the MXU without repeating K/V across groups.
+    """
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = q_ref.shape[-1]
+    # (H, bq, d) -> (n_kv, groups*bq, d): heads are (kv, group)-major, so a
+    # single reshape folds the group axis into the query-row axis
+    q = q_ref[0].astype(jnp.float32).reshape(n_kv, groups * bq, d)
+    k = k_ref[0]
+    v = v_ref[0]
+    if cfg_kv is not None:
+        k = decode_to_f32(k, cfg_kv)
+        v = decode_to_f32(v, cfg_kv)
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+    # s[kv, g*bq + qi, p] = q . k  (batched over the kv head)
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    # row r of the folded axis is query qi = r % bq of this tile
+    qpos = qo_ref[b] + i * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (n_kv, groups * bq, bk), 1) % bq
+    kpos = j * bk + jax.lax.broadcasted_iota(
+        jnp.int32, (n_kv, groups * bq, bk), 2)
+    valid = kpos < sl_ref[b]                          # KV padding / garbage
+    if causal:
+        valid = valid & (qpos >= kpos)
+    if window is not None:
+        valid = valid & (qpos - kpos < window)
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...][:, :, :1]                     # (n_kv, g*bq, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+        p.sum(axis=-1, keepdims=True), l_ref.shape)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+
+    @pl.when(j == nkv_blocks - 1)
+    def _done():
+        l = l_ref[...][:, :, :1]
+        out = acc_ref[...] / jnp.where(l == 0, 1.0, l)
+        o_ref[0] = out.reshape(n_kv * groups, bq, d)
+
+
+def _prefill_scratch(n_kv, groups, bq, d):
+    return [
+        pltpu.VMEM((n_kv, groups * bq, 128), jnp.float32),
+        pltpu.VMEM((n_kv, groups * bq, 128), jnp.float32),
+        pltpu.VMEM((n_kv, groups * bq, d), jnp.float32),
+    ]
+
+
+# batch and q-tile axes carry no state; the kv axis owns the online-softmax
+# accumulators and must run in order
+_PREFILL_SEMANTICS = ("parallel", "parallel", "arbitrary")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg_kv", "causal", "window", "softcap", "bq",
+                     "interpret"),
+)
+def paged_flash_prefill(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                        seq_lens: jnp.ndarray, q_offset: jnp.ndarray, *,
+                        cfg_kv: PositConfig | None = None,
+                        causal: bool = True, window: int | None = None,
+                        softcap: float | None = None, bq: int = 128,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Fused paged prefill attention (the chunked-prefill / TTFT hot path).
+
+    q [B, H, Sq, D] x paged KV pool -> [B, H, Sq, D] f32.  The pool layout
+    matches paged_flash_decode: k_pages/v_pages [num_pages, n_kv, page, D]
+    (posit storage ints when cfg_kv is set), page_table [B, W] scalar-
+    prefetched so the BlockSpec index map streams exactly the pages each
+    sequence owns into VMEM.  seq_lens [B] is the *post-append* valid
+    length (positions >= it are masked); q_offset [B] is the absolute
+    position of each sequence's first query row (mid-prefill chunks:
+    seq_lens - num_new).  Query rows beyond the caller's real chunk length
+    compute garbage and must be ignored by the caller (the engine reads the
+    last *valid* position only).  softcap/window/causal are masked
+    in-kernel — the conditions that used to force the gather_kv dense
+    fallback.
+    """
+    B, H, Sq, d = q.shape
+    _, n_kv, page, _ = k_pages.shape
+    _, W = page_table.shape
+    groups = H // n_kv
+    scale = 1.0 / (d ** 0.5)
+    bq_ = min(bq, max(8, Sq))
+    pq = (-Sq) % bq_
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    nq = (Sq + pq) // bq_
+    grid = (B, nq, W)
+
+    body = functools.partial(
+        _prefill_body, cfg_kv=cfg_kv, n_kv=n_kv, groups=groups, bq=bq_,
+        bk=page, nkv_blocks=W, scale=scale, causal=causal, window=window,
+        softcap=softcap)
+
+    def kernel(pt_ref, sl_ref, qo_ref, *rest):
+        body(sl_ref, qo_ref, *rest)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, bq_, d),
+                         lambda b, i, j, pt, sl, qo: (b, 0, i, 0)),
+            pl.BlockSpec((1, n_kv, page, d),
+                         lambda b, i, j, pt, sl, qo: (pt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, n_kv, page, d),
+                         lambda b, i, j, pt, sl, qo: (pt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, bq_, d),
+                               lambda b, i, j, pt, sl, qo: (b, 0, i, 0)),
+        scratch_shapes=_prefill_scratch(n_kv, groups, bq_, d),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, d), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=_PREFILL_SEMANTICS),
+        interpret=interpret,
+    )(page_table, seq_lens, q_offset, q, k_pages, v_pages)
+    return out[:, :, :Sq, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg_kv", "causal", "window", "softcap", "bq", "bk",
+                     "interpret"),
+)
+def flash_prefill_contiguous(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                             kv_len: jnp.ndarray, q_offset: jnp.ndarray, *,
+                             cfg_kv: PositConfig | None = None,
+                             causal: bool = True, window: int | None = None,
+                             softcap: float | None = None, bq: int = 128,
+                             bk: int = 256,
+                             interpret: bool = False) -> jnp.ndarray:
+    """The prefill kernel over a contiguous (dense-cache / training) KV.
+
+    q [B, H, Sq, D] x k/v [B, n_kv, Skv, D] -> [B, H, Sq, D] f32.  Same
+    kernel body as paged_flash_prefill; the KV tile index map is the block
+    index instead of a page-table lookup, so the dense engine's prefill and
+    the training forward stream the cache (posit ints or float) tile by
+    tile without any dense f32 copy.  kv_len/q_offset [B] as in the paged
+    entry (scalars must be broadcast by the caller).
+
+    Default blocks: bq=128 query rows x bk=256 KV rows keeps the f32
+    working set (decoded K+V tiles + acc + running stats) under ~2 MB for
+    d=128 GQA shapes — small enough to double-buffer the posit tile
+    fetches, large enough that every HBM byte feeds >= bq MXU MACs (well
+    past the ~300 flops/byte ridge at posit16 width).
+    """
+    B, H, Sq, d = q.shape
+    _, n_kv, Skv, _ = k.shape
+    groups = H // n_kv
+    scale = 1.0 / (d ** 0.5)
+    bq_ = min(bq, max(8, Sq))
+    bk_ = min(bk, Skv)
+    pq = (-Sq) % bq_
+    pk = (-Skv) % bk_
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        # padded keys sit at kpos >= Skv >= kv_len and are masked in-kernel
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq, nk = (Sq + pq) // bq_, (Skv + pk) // bk_
+    grid = (B, nq, nk)
+
+    body = functools.partial(
+        _prefill_body, cfg_kv=cfg_kv, n_kv=n_kv, groups=groups, bq=bq_,
+        bk=bk_, nkv_blocks=nk, scale=scale, causal=causal, window=window,
+        softcap=softcap)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, bq_, d),
+                         lambda b, i, j, sl, qo: (b, 0, i, 0)),
+            pl.BlockSpec((1, n_kv, bk_, d),
+                         lambda b, i, j, sl, qo: (b, 0, j, 0)),
+            pl.BlockSpec((1, n_kv, bk_, d),
+                         lambda b, i, j, sl, qo: (b, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, bq_, d),
+                               lambda b, i, j, sl, qo: (b, 0, i, 0)),
+        scratch_shapes=_prefill_scratch(n_kv, groups, bq_, d),
+    )
+    out = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, d), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=_PREFILL_SEMANTICS),
+        interpret=interpret,
+    )(kv_len, q_offset, q, k, v)
+    return out[:, :, :Sq, :]
+
+
 @functools.partial(jax.jit, static_argnames=("cfg_kv", "window", "interpret"))
 def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
                        v_pages: jnp.ndarray, page_table: jnp.ndarray,
@@ -183,6 +433,8 @@ def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
                           window=window),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bh, H, d), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(page_table, seq_lens, q, k_pages, v_pages)
 
@@ -236,6 +488,8 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((bq_, 128), jnp.float32),
             pltpu.VMEM((bq_, d), jnp.float32),
         ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=_PREFILL_SEMANTICS),
         interpret=interpret,
     )(q, k, v)
     return out[:, :sq, :]

@@ -34,6 +34,35 @@ def use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def pallas_interpret() -> bool:
+    """Run the Pallas kernels in interpret mode (REPRO_PALLAS_INTERPRET=1).
+
+    With REPRO_USE_PALLAS=1 this executes the *kernel* code paths on the
+    CPU backend — the tier-1 suite uses it to drive whole engines through
+    the fused attention/gemm kernels (and to assert the gather_kv fallback
+    is never taken) without TPU hardware."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    return env is not None and env not in ("0", "false", "False")
+
+
+# in-process equivalent of REPRO_FORCE_GATHER=1 (tests/benches that cannot
+# re-exec); both are consulted by every fused-attention dispatch site, so
+# forcing the baseline forces the *whole* gather_kv + jnp blockwise path —
+# a gather leg can never half-dispatch back into a fused kernel
+FORCE_REFERENCE = False
+
+
+def force_reference() -> bool:
+    """Force the jnp reference paths even where `use_pallas()` would fuse
+    (REPRO_FORCE_GATHER=1 or ops.FORCE_REFERENCE) — the baseline leg of the
+    prefill/TTFT benchmarks, which measure the fused kernels against the
+    gather_kv + blockwise dense-materialization path they replaced."""
+    if FORCE_REFERENCE:
+        return True
+    env = os.environ.get("REPRO_FORCE_GATHER")
+    return env is not None and env not in ("0", "false", "False")
+
+
 def _split(x, cfg: PositConfig | None):
     """(operand, explicit-cfg) -> (raw bits/array, cfg, was_posit_array)."""
     if isinstance(x, PositArray):
@@ -79,7 +108,8 @@ def _resolve_elementwise(op: str, inputs, cfg: PositConfig | None):
 
 def gemm(a, b, *, cfg_a: PositConfig | None = None,
          cfg_b: PositConfig | None = None,
-         cfg_out: PositConfig | None = None, out_posit: bool = False):
+         cfg_out: PositConfig | None = None, out_posit: bool = False,
+         transpose_b: bool = False):
     a, cfg_a, a_posit = _split(a, cfg_a)
     b, cfg_b, b_posit = _split(b, cfg_b)
     # cfg-less *int* operands would be matmul'd as integer values: posit
@@ -100,35 +130,42 @@ def gemm(a, b, *, cfg_a: PositConfig | None = None,
         cfg_out = cfg_a if cfg_a is not None else cfg_b
     if use_pallas():
         out = _gemm.posit_gemm(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
-                               cfg_out=cfg_out, out_posit=out_posit)
+                               cfg_out=cfg_out, out_posit=out_posit,
+                               transpose_b=transpose_b,
+                               interpret=pallas_interpret())
     else:
         out = _ref.posit_gemm_ref(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
-                                  cfg_out=cfg_out, out_posit=out_posit)
+                                  cfg_out=cfg_out, out_posit=out_posit,
+                                  transpose_b=transpose_b)
     if out_posit and (a_posit or b_posit):
         return PositArray(out, cfg_out)
     return out
 
 
-def pw_matmul(x, w, cfg: PositConfig | None = None):
+def pw_matmul(x, w, cfg: PositConfig | None = None, *,
+              transpose_b: bool = False):
     """[..., k] @ posit-weight [k, n] -> f32 (the LM linear-layer hot path).
 
     `w` is a PositArray (preferred) or raw storage ints + explicit `cfg`
-    (deprecated shim).
+    (deprecated shim).  transpose_b: `w` is stored [n, k] and contracted on
+    its last dim — the unembedding path, where the tied [vocab, d] table
+    must stream at posit width without materializing a transposed (or
+    decoded) copy.
     """
     w, cfg, _ = _split(w, cfg)
     if cfg is None:
         raise TypeError("pw_matmul needs a PositArray weight or explicit cfg")
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    out = gemm(x2, w, cfg_a=None, cfg_b=cfg)
-    return out.reshape(*lead, w.shape[-1])
+    out = gemm(x2, w, cfg_a=None, cfg_b=cfg, transpose_b=transpose_b)
+    return out.reshape(*lead, w.shape[0] if transpose_b else w.shape[-1])
 
 
 def elementwise(op: str, *inputs, cfg: PositConfig | None = None):
     raw, cfg, any_posit = _resolve_elementwise(f"elementwise('{op}')",
                                                inputs, cfg)
     if use_pallas():
-        out = _ew.elementwise(op, *raw, cfg=cfg)
+        out = _ew.elementwise(op, *raw, cfg=cfg, interpret=pallas_interpret())
     else:
         out = _ref.elementwise_ref(op, *raw, cfg=cfg)
     return PositArray(out, cfg) if any_posit else out
@@ -138,7 +175,8 @@ def divide(a, b, *, cfg: PositConfig | None = None,
            mode: str = "poly_corrected", nr_rounds: int = 1):
     (a, b), cfg, any_posit = _resolve_elementwise("divide", (a, b), cfg)
     if use_pallas():
-        out = _ew.divide(a, b, cfg=cfg, mode=mode, nr_rounds=nr_rounds)
+        out = _ew.divide(a, b, cfg=cfg, mode=mode, nr_rounds=nr_rounds,
+                         interpret=pallas_interpret())
     else:
         out = _ref.divide_ref(a, b, cfg=cfg, mode=mode, nr_rounds=nr_rounds)
     return PositArray(out, cfg) if any_posit else out
@@ -150,7 +188,7 @@ def decode(p, cfg: PositConfig | None = None):
     if cfg is None:
         raise TypeError("decode needs a PositArray or explicit cfg")
     if use_pallas():
-        return _codec.decode_block(p, cfg)
+        return _codec.decode_block(p, cfg, interpret=pallas_interpret())
     return _ref.decode_ref(p, cfg)
 
 
@@ -158,7 +196,7 @@ def encode(v, cfg: PositConfig):
     """f32 values -> posit payload bits (raw; wrap via pnp.asarray for a
     PositArray)."""
     if use_pallas():
-        return _codec.encode_block(v, cfg)
+        return _codec.encode_block(v, cfg, interpret=pallas_interpret())
     return _ref.encode_ref(v, cfg)
 
 
@@ -167,5 +205,45 @@ def attention(q, k, v, *, cfg_kv: PositConfig | None = None,
     """[BH, Sq, D] attention over (possibly posit) KV."""
     k, v, cfg_kv = unwrap_kv(k, v, cfg_kv, q=q)
     if use_pallas():
-        return _fa.flash_attention(q, k, v, cfg_kv=cfg_kv, causal=causal)
+        return _fa.flash_attention(q, k, v, cfg_kv=cfg_kv, causal=causal,
+                                   interpret=pallas_interpret())
     return _ref.flash_attention_ref(q, k, v, cfg_kv=cfg_kv, causal=causal)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, page_table, seq_lens,
+                            q_offset, *, cfg_kv: PositConfig | None = None,
+                            causal: bool = True, window: int | None = None,
+                            softcap: float | None = None,
+                            interpret: bool | None = None):
+    """Fused paged prefill: q [B, H, Sq, D] x the paged KV pool.
+
+    The TPU-only chunked-prefill hot path (serving.paged_kv.paged_attention
+    routes here whenever `use_pallas()`); the pure-jnp oracle is
+    gather_kv + models.blocks.blockwise_attention.  Pages may be PositArray
+    (format travels with the pool) or raw ints + cfg_kv.
+    """
+    k_pages, v_pages, cfg_kv = unwrap_kv(k_pages, v_pages, cfg_kv, q=q)
+    if interpret is None:
+        interpret = pallas_interpret()
+    return _fa.paged_flash_prefill(
+        q, k_pages, v_pages, page_table, seq_lens, q_offset, cfg_kv=cfg_kv,
+        causal=causal, window=window, softcap=softcap, interpret=interpret)
+
+
+def flash_prefill(q, k, v, kv_len, q_offset, *,
+                  cfg_kv: PositConfig | None = None, causal: bool = True,
+                  window: int | None = None, softcap: float | None = None,
+                  interpret: bool | None = None):
+    """Fused prefill over a contiguous KV cache (GQA layout).
+
+    q [B, H, Sq, D] x k/v [B, n_kv, Skv, D]; kv_len/q_offset [B] int32.
+    The TPU dispatch target of models.blocks.blockwise_attention (training
+    forward and the dense engine's prefill), which remains the bit-parity
+    reference; the dense cache streams tile-by-tile at storage width.
+    """
+    k, v, cfg_kv = unwrap_kv(k, v, cfg_kv, q=q)
+    if interpret is None:
+        interpret = pallas_interpret()
+    return _fa.flash_prefill_contiguous(
+        q, k, v, kv_len, q_offset, cfg_kv=cfg_kv, causal=causal,
+        window=window, softcap=softcap, interpret=interpret)

@@ -40,7 +40,7 @@ def _pad_to(x: jnp.ndarray, m0: int, m1: int, value=0) -> jnp.ndarray:
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, cfg_a, cfg_b, nk, out_posit,
-                 cfg_out):
+                 cfg_out, transpose_b):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -56,7 +56,14 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, cfg_a, cfg_b, nk, out_posit,
     else:
         b = b.astype(jnp.float32)
 
-    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    if transpose_b:
+        # b tile is [bn, bk]: contract both operands on their last dim — the
+        # transposed layout never materializes, in VMEM or HBM
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _done():
@@ -67,31 +74,46 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, cfg_a, cfg_b, nk, out_posit,
             o_ref[...] = acc
 
 
+# i/j tiles own disjoint output blocks; only the k axis carries the
+# accumulator and must stay ordered
+_GEMM_SEMANTICS = ("parallel", "parallel", "arbitrary")
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("cfg_a", "cfg_b", "cfg_out", "out_posit", "bm", "bn",
-                     "bk", "interpret"),
+                     "bk", "transpose_b", "interpret"),
 )
 def posit_gemm(a: jnp.ndarray, b: jnp.ndarray, *,
                cfg_a: PositConfig | None, cfg_b: PositConfig | None,
                cfg_out: PositConfig | None = None, out_posit: bool = False,
-               bm: int = 256, bn: int = 256, bk: int = 512,
+               bm: int = 512, bn: int = 512, bk: int = 512,
+               transpose_b: bool = False,
                interpret: bool = False) -> jnp.ndarray:
-    """[m,k] @ [k,n] with posit operands decoded in-kernel.
+    """[m,k] @ [k,n] (or [m,k] @ [n,k].T when transpose_b) with posit
+    operands decoded in-kernel.
 
     cfg_a/cfg_b None means that operand is already float.  Output is f32
     (quire-accumulated) or posit bits when out_posit (single final rounding).
-    Block shapes: MXU-aligned multiples of 128; defaults sized so the f32
-    working set (a+b decoded + acc) stays < 2 MB of VMEM.
+    Block shapes: MXU-aligned multiples of 128.  Roofline defaults: HBM
+    traffic is m*k*(n/bn) + k*n*(m/bm) operand bytes, so square 512-blocks
+    halve the re-read term vs the old 256x256 while the f32 working set
+    (decoded a + b + acc = 3 MB, double-buffered narrow-int inputs on top)
+    still fits VMEM with headroom; the k axis stays at 512 so one tile pair
+    amortizes its fetch over >= 512 MACs/element — past the MXU ridge even
+    at posit8 (1 byte/elem) width.
     """
     m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
+    if transpose_b:
+        n, k2 = b.shape
+    else:
+        k2, n = b.shape
+    assert k == k2, (a.shape, b.shape, transpose_b)
     bm_ = min(bm, max(8, m)); bn_ = min(bn, max(128, n)); bk_ = min(bk, k)
     a = _pad_to(a, bm_, bk_)
-    b = _pad_to(b, bk_, bn_)
+    b = _pad_to(b, bn_, bk_) if transpose_b else _pad_to(b, bk_, bn_)
     mp, kp = a.shape
-    _, np_ = b.shape
+    np_ = b.shape[0] if transpose_b else b.shape[1]
     grid = (mp // bm_, np_ // bn_, kp // bk_)
 
     if out_posit:
@@ -99,29 +121,40 @@ def posit_gemm(a: jnp.ndarray, b: jnp.ndarray, *,
     else:
         out_dtype = jnp.float32
 
+    if transpose_b:
+        b_spec = pl.BlockSpec((bn_, bk_), lambda i, j, kk: (j, kk))
+    else:
+        b_spec = pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j))
     out = pl.pallas_call(
         functools.partial(_gemm_kernel, cfg_a=cfg_a, cfg_b=cfg_b, nk=grid[2],
-                          out_posit=out_posit, cfg_out=cfg_out),
+                          out_posit=out_posit, cfg_out=cfg_out,
+                          transpose_b=transpose_b),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            b_spec,
         ],
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=_GEMM_SEMANTICS),
         interpret=interpret,
     )(a, b)
     return out[:m, :n]
 
 
 def pw_gemm(x: jnp.ndarray, w_bits: jnp.ndarray, cfg: PositConfig, *,
-            bm: int = 256, bn: int = 256, bk: int = 512,
+            bm: int = 512, bn: int = 512, bk: int = 512,
+            transpose_b: bool = False,
             interpret: bool = False) -> jnp.ndarray:
     """Activations[f32/bf16, m x k] @ posit-weights[k x n] -> f32.
 
     The LM forward/serving hot path: weights stream from HBM at posit width
-    and are decoded in VMEM right before the MXU.
+    and are decoded in VMEM right before the MXU.  transpose_b: the weight
+    is stored [n, k] (the tied unembedding table) and contracted on its
+    last dim in-kernel.
     """
     return posit_gemm(x, w_bits, cfg_a=None, cfg_b=cfg, out_posit=False,
-                      bm=bm, bn=bn, bk=bk, interpret=interpret)
+                      bm=bm, bn=bn, bk=bk, transpose_b=transpose_b,
+                      interpret=interpret)

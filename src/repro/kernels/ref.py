@@ -15,10 +15,19 @@ from repro.core.types import PositConfig
 
 def posit_gemm_ref(a, b, *, cfg_a: PositConfig | None, cfg_b: PositConfig | None,
                    cfg_out: PositConfig | None = None,
-                   out_posit: bool = False) -> jnp.ndarray:
+                   out_posit: bool = False,
+                   transpose_b: bool = False) -> jnp.ndarray:
+    import jax
     af = decode_to_f32(a, cfg_a) if cfg_a is not None else a.astype(jnp.float32)
     bf = decode_to_f32(b, cfg_b) if cfg_b is not None else b.astype(jnp.float32)
-    acc = jnp.dot(af, bf, preferred_element_type=jnp.float32)
+    if transpose_b:
+        # contract both on their last dim (b stored [n, k]) — the same
+        # dot_general the old unembed einsum "...d,vd->...v" lowered to, so
+        # the ref path stays bit-identical to the pre-pw_gemm unembedding
+        acc = jax.lax.dot_general(af, bf, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    else:
+        acc = jnp.dot(af, bf, preferred_element_type=jnp.float32)
     return f32_to_posit(acc, cfg_out) if out_posit else acc
 
 

@@ -16,6 +16,7 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -132,6 +133,13 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
     fused dequant — HBM traffic stays at posit width and no full-cache
     float copy ever exists.
 
+    On the Pallas path, Sq > 1 dispatches to the fused prefill kernel
+    (kernels.ops.flash_prefill): the training forward and the dense
+    engine's chunked prefill run the same kernel serving prefill uses, with
+    this function's jnp scan as the bit-parity reference — and as the
+    backward (jax.custom_vjp recomputes the reference VJP, flash-attention
+    style, so nothing score-shaped is ever saved).
+
     q_offset: absolute position of q[0] (decode: cache length; may be traced;
         scalar or per-sequence [B] for the paged engine's ragged batches).
     kv_len: number of valid KV positions (dynamic; default Skv; scalar or
@@ -141,10 +149,7 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
     from repro.core.array import unwrap_kv
     k, v, cfg_kv = unwrap_kv(k, v, cfg_kv, q=q)
     B, H, Sq, D = q.shape
-    KV = n_kv
-    G = H // KV
     Skv = k.shape[2]
-    scale = D ** -0.5
     if kv_len is None:
         kv_len = Skv
     # normalize to a [B]-or-[1] vector: per-sequence lengths/offsets (paged
@@ -154,6 +159,27 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
     kv_len = kv_len[None] if kv_len.ndim == 0 else kv_len
     q_off = jnp.asarray(q_offset)
     q_off = q_off[None] if q_off.ndim == 0 else q_off
+
+    from repro.kernels import ops as kops
+    if Sq > 1 and kops.use_pallas() and not kops.force_reference():
+        static = (cfg_kv, n_kv, causal, window, softcap)
+        qo = jnp.broadcast_to(q_off.astype(jnp.int32), (B,))
+        kl = jnp.broadcast_to(kv_len.astype(jnp.int32), (B,))
+        return _fused_prefill(static, q, k, v, kl, qo).astype(q.dtype)
+    return _blockwise_jnp(q, k, v, n_kv=n_kv, causal=causal, q_off=q_off,
+                          window=window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                          softcap=softcap, kv_len=kv_len, cfg_kv=cfg_kv)
+
+
+def _blockwise_jnp(q, k, v, *, n_kv: int, causal: bool, q_off, window,
+                   q_chunk: int, kv_chunk: int, softcap, kv_len, cfg_kv):
+    """The pure-jnp scan (k/v raw, q_off/kv_len already [B]-or-[1]): the
+    reference/oracle body and the non-Pallas execution path."""
+    B, H, Sq, D = q.shape
+    KV = n_kv
+    G = H // KV
+    Skv = k.shape[2]
+    scale = D ** -0.5
 
     if Sq == 1:
         # decode fast path (flash-decoding layout): no scan — S-contraction
@@ -266,6 +292,52 @@ def blockwise_attention(q, k, v, *, n_kv: int, causal: bool, q_offset=0,
         (jnp.arange(nq), qb))
     out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq + pq, D)[:, :, :Sq]
     return out.astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_prefill(static, q, k, v, kv_len, q_off):
+    """Fused prefill forward with the jnp blockwise scan as its VJP.
+
+    static = (cfg_kv, n_kv, causal, window, softcap) — hashable, so one
+    custom_vjp covers every arch.  The forward runs the Pallas kernel
+    (posit KV decodes in VMEM, no dense copy); the backward recomputes
+    through `_blockwise_jnp` and differentiates that — flash-attention
+    memory behaviour with the reference as the single source of gradient
+    truth.  Integer operands (posit KV bits, lengths/offsets) carry no
+    tangents and get None cotangents.
+    """
+    cfg_kv, n_kv, causal, window, softcap = static
+    from repro.kernels import ops as kops
+    return kops.flash_prefill(q, k, v, kv_len, q_off, cfg_kv=cfg_kv,
+                              causal=causal, window=window, softcap=softcap)
+
+
+def _fused_prefill_fwd(static, q, k, v, kv_len, q_off):
+    return _fused_prefill(static, q, k, v, kv_len, q_off), \
+        (q, k, v, kv_len, q_off)
+
+
+def _fused_prefill_bwd(static, res, g):
+    cfg_kv, n_kv, causal, window, softcap = static
+    q, k, v, kv_len, q_off = res
+
+    def ref(qq, kk, vv):
+        return _blockwise_jnp(qq, kk, vv, n_kv=n_kv, causal=causal,
+                              q_off=q_off, window=window, q_chunk=512,
+                              kv_chunk=512, softcap=softcap, kv_len=kv_len,
+                              cfg_kv=cfg_kv)
+
+    if jnp.issubdtype(k.dtype, jnp.floating):
+        out, vjp = jax.vjp(ref, q, k, v)
+        dq, dk, dv = vjp(g.astype(out.dtype))
+        return dq, dk, dv, None, None
+    # posit KV (serving): bits are integers, only q carries a tangent
+    out, vjp = jax.vjp(lambda qq: ref(qq, k, v), q)
+    (dq,) = vjp(g.astype(out.dtype))
+    return dq, None, None, None, None
+
+
+_fused_prefill.defvjp(_fused_prefill_fwd, _fused_prefill_bwd)
 
 
 # --------------------------------------------------------------------------
@@ -428,13 +500,21 @@ def embed(tokens, p: Params, policy: PositPolicy):
 
 
 def unembed(h, p: Params, policy: PositPolicy):
+    """h [..., d] @ tied-table [V, d].T -> logits [..., V].
+
+    Posit tables route through pw_gemm with transpose_b: the [V, d] table —
+    the decode step's largest single tensor — streams at posit width and
+    decodes tile-by-tile in VMEM, instead of materializing the full f32
+    table every step.  Under vocab-parallel TP the local [V/ntp, d] shard
+    takes the same path.  The jnp reference contracts the identical
+    dot_general dims, so logits stay bit-identical across backends.
+    """
     t = p["table"]
-    if isinstance(t, PositArray):
-        t = t.to_f32()
-    elif t.dtype in (jnp.int8, jnp.int16):
-        from repro.core.decode import decode_to_f32
-        t = decode_to_f32(t, policy.weights)
-    elif policy is not None and policy.weights is not None:
+    if isinstance(t, PositArray) or jnp.issubdtype(t.dtype, jnp.integer):
+        from repro.kernels import ops as kops
+        cfg = None if isinstance(t, PositArray) else policy.weights
+        return kops.pw_matmul(h, t, cfg, transpose_b=True)
+    if policy is not None and policy.weights is not None:
         t = posit_cast_ste(t, policy.weights)
     return jnp.einsum("...d,vd->...v", h, t,
                       preferred_element_type=jnp.float32)

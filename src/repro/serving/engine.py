@@ -11,7 +11,11 @@ benchmarks/serving_decode.py measures against.
 requests into sequence slots mid-flight, chunk-prefills their prompts,
 decodes all active slots in one fused step over the paged pool
 (serving/paged_kv.py), retires finished sequences and hands their pages to
-waiting requests immediately.  Out-of-pages triggers preemption (youngest
+waiting requests immediately.  On the Pallas path both step shapes are
+fully fused attention: decode through paged_flash_decode, prefill chunks
+(any Sq, softcap, window) through paged_flash_prefill — the gather_kv dense
+materialization never runs on TPU (paged_kv.GATHER_FALLBACKS counts any
+regression), so time-to-first-token streams KV at posit width end to end.  Out-of-pages triggers preemption (youngest
 sequence requeued, pages freed), so the engine degrades gracefully instead
 of OOMing.  Every device step runs through exactly two jitted callables
 (one prefill-chunk shape, one decode shape) built once per model config and

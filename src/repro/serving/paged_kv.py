@@ -32,6 +32,8 @@ dict; distinguished by the "page_table" key):
 """
 from __future__ import annotations
 
+import collections
+
 import jax
 import jax.numpy as jnp
 
@@ -40,6 +42,18 @@ from repro.core.convert import f32_to_posit
 from repro.core.types import PositConfig
 
 GARBAGE_PAGE = 0   # page index reserved for masked/invalid writes
+
+# trace-time executions of the gather_kv dense-materialization fallback in
+# paged_attention, keyed by the reason it was taken.  On the Pallas path
+# (use_pallas(), i.e. TPU or the interpret-mode tier-1 drive) this must stay
+# empty — every Sq, window and softcap routes through the fused kernels —
+# so tests assert no new entries appear while an engine runs; gather_kv
+# itself survives as the CPU/interpret reference oracle.  Forcing the
+# fallback (the benchmark baseline leg) goes through REPRO_FORCE_GATHER=1 /
+# kernels.ops.FORCE_REFERENCE, which every fused dispatch site consults —
+# including blockwise_attention's, so the forced leg is the *whole* jnp
+# reference, never gather + a fused kernel.
+GATHER_FALLBACKS: collections.Counter = collections.Counter()
 
 
 def init_layer_pages(num_pages: int, n_kv: int, page_size: int, head_dim: int,
@@ -157,17 +171,22 @@ def gather_kv(cache: dict):
 
 def paged_attention(q, cache: dict, *, n_kv: int, causal: bool = True,
                     q_offset=None, window: int | None = None,
-                    softcap: float | None = None, interpret: bool = False):
+                    softcap: float | None = None,
+                    interpret: bool | None = None):
     """Attention over a paged cache.  q: [B, H, Sq, D] float.
 
-    Decode steps (Sq == 1, no softcap) take the fused Pallas paged-gather
-    kernel on TPU — pages decode in VMEM right before the MXU, no dense
-    materialization.  Windowed (local-attention) decode also routes here:
-    the kernel masks positions outside the trailing `window` tokens, so
-    griffin/recurrentgemma-style archs keep the paged decode fast path.
-    Everything else (prefill chunks, softcapped attention, the CPU path)
-    gathers the dense view and reuses models.blocks.blockwise_attention,
-    which is bit-identical to the dense engine by construction.
+    On the Pallas path (TPU, or CPU interpret mode) **every** shape is
+    fused: decode steps (Sq == 1, no softcap) take paged_flash_decode, and
+    everything else — prefill chunks of any Sq, softcapped archs, windowed
+    prefill — takes paged_flash_prefill.  Both scalar-prefetch the page
+    table and decode posit pages in VMEM right before the MXU, so the TPU
+    hot path performs no dense KV materialization for any Sq, with or
+    without window/softcap.
+
+    The gather_kv + models.blocks.blockwise_attention path (bit-identical
+    to the dense engine by construction) survives only as the CPU/interpret
+    reference oracle; taking it is counted in GATHER_FALLBACKS so tests can
+    assert the steady-state TPU path never lands there.
     """
     from repro.kernels import ops as kops
 
@@ -179,16 +198,27 @@ def paged_attention(q, cache: dict, *, n_kv: int, causal: bool = True,
         q_offset = cache["seq_lens"] - cache["num_new"]
     kp = cache["k_pages"]
     posit_pages = isinstance(kp, PositArray)
-    if (Sq == 1 and softcap is None and kops.use_pallas()):
-        from repro.kernels.flash_attention import paged_flash_decode
-        kbuf = kp.bits if posit_pages else kp
-        vbuf = cache["v_pages"].bits if posit_pages else cache["v_pages"]
-        out = paged_flash_decode(
-            q[:, :, 0, :], kbuf, vbuf, cache["page_table"],
-            cache["seq_lens"], cfg_kv=kp.cfg if posit_pages else None,
-            window=window, interpret=interpret)
-        return out[:, :, None, :].astype(q.dtype)
+    if kops.use_pallas() and not kops.force_reference():
+        if Sq == 1 and softcap is None:
+            from repro.kernels.flash_attention import paged_flash_decode
+            kbuf = kp.bits if posit_pages else kp
+            vbuf = cache["v_pages"].bits if posit_pages else cache["v_pages"]
+            out = paged_flash_decode(
+                q[:, :, 0, :], kbuf, vbuf, cache["page_table"],
+                cache["seq_lens"],
+                cfg_kv=kp.cfg if posit_pages else None, window=window,
+                interpret=(kops.pallas_interpret() if interpret is None
+                           else interpret))
+            return out[:, :, None, :].astype(q.dtype)
+        q_off = jnp.broadcast_to(
+            jnp.asarray(q_offset, jnp.int32).reshape(-1), (B,))
+        out = kops.paged_prefill_attention(
+            q, kp, cache["v_pages"], cache["page_table"],
+            cache["seq_lens"], q_off, causal=causal, window=window,
+            softcap=softcap, interpret=interpret)
+        return out.astype(q.dtype)
 
+    GATHER_FALLBACKS["forced" if kops.use_pallas() else "jnp-reference"] += 1
     from repro.models.blocks import blockwise_attention
     k, v = gather_kv(cache)
     return blockwise_attention(q, k, v, n_kv=n_kv, causal=causal,

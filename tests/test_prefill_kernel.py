@@ -1,0 +1,330 @@
+"""Fused paged/contiguous flash *prefill* kernel: parity vs the gather_kv +
+blockwise_attention oracle, chunk-boundary causality, in-kernel
+window/softcap masking, the no-dense-materialization guarantee on the
+Pallas path (gather-fallback counter), the transpose_b pw_gemm unembedding
+path, and the custom_vjp (kernel forward / reference backward) gradients.
+
+Everything runs the real kernel code in interpret mode, so regressions fail
+in tier-1 before the nightly TPU lane ever sees them.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.convert import f32_to_posit
+from repro.core.types import P8_2, P16_2
+from repro.kernels.flash_attention import (flash_prefill_contiguous,
+                                           paged_flash_prefill)
+from repro.models.blocks import blockwise_attention
+from repro.serving.paged_kv import gather_kv
+
+TOL = dict(rtol=2e-6, atol=2e-6)
+
+
+def _sequential_table(B, W):
+    pt = np.zeros((B, W), np.int32)
+    pt[:] = 1 + np.arange(B * W).reshape(B, W)
+    return jnp.asarray(pt)
+
+
+def _pool(rng, B, n_kv, page, W, D, pcfg):
+    kd = jnp.asarray(rng.normal(size=(1 + B * W, n_kv, page, D)), jnp.float32)
+    vd = jnp.asarray(rng.normal(size=(1 + B * W, n_kv, page, D)), jnp.float32)
+    if pcfg is not None:
+        return f32_to_posit(kd, pcfg), f32_to_posit(vd, pcfg)
+    return kd, vd
+
+
+def _oracle(q, kp, vp, pt, pcfg, *, seq_lens, q_off, causal=True,
+            window=None, softcap=None):
+    """The dense-materialization reference the kernel replaced: gather_kv
+    into the position-identical dense view, then the jnp blockwise scan."""
+    if pcfg is not None:
+        from repro.core.array import PositArray
+        cache = {"k_pages": PositArray(kp, pcfg),
+                 "v_pages": PositArray(vp, pcfg), "page_table": pt}
+    else:
+        cache = {"k_pages": kp, "v_pages": vp, "page_table": pt}
+    k, v = gather_kv(cache)
+    return blockwise_attention(q, k, v, n_kv=kp.shape[1], causal=causal,
+                               q_offset=q_off, window=window,
+                               softcap=softcap, kv_len=seq_lens)
+
+
+@pytest.mark.parametrize("pcfg", [None, P16_2, P8_2],
+                         ids=["float", "p16", "p8"])
+@pytest.mark.parametrize("window,softcap",
+                         [(None, None), (5, None), (None, 8.0), (7, 12.0)],
+                         ids=["plain", "window", "softcap", "both"])
+def test_paged_prefill_matches_gathered_blockwise_oracle(pcfg, window,
+                                                         softcap):
+    """Sq > 1 chunks over the paged pool (interpret mode) vs the gather_kv
+    + blockwise oracle at ragged lengths — the masks that used to force the
+    dense fallback (softcap, window) are now in-kernel."""
+    rng = np.random.default_rng(7)
+    B, n_kv, G, D, page, W, Sq = 3, 2, 2, 16, 8, 4, 6
+    H = n_kv * G
+    seq_lens = jnp.asarray([7, 20, 32], jnp.int32)     # post-append
+    q_off = seq_lens - Sq
+    pt = _sequential_table(B, W)
+    kb, vb = _pool(rng, B, n_kv, page, W, D, pcfg)
+    q = jnp.asarray(rng.normal(size=(B, H, Sq, D)), jnp.float32)
+
+    out = paged_flash_prefill(q, kb, vb, pt, seq_lens, q_off, cfg_kv=pcfg,
+                              window=window, softcap=softcap, bq=4,
+                              interpret=True)
+    ref = _oracle(q, kb, vb, pt, pcfg, seq_lens=seq_lens, q_off=q_off,
+                  window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@pytest.mark.parametrize("pcfg", [None, P16_2], ids=["float", "p16"])
+def test_paged_prefill_noncausal_encoder_chunk(pcfg):
+    rng = np.random.default_rng(8)
+    B, n_kv, G, D, page, W, Sq = 2, 2, 2, 16, 8, 4, 8
+    H = n_kv * G
+    seq_lens = jnp.asarray([8, 26], jnp.int32)
+    q_off = jnp.zeros((B,), jnp.int32)
+    pt = _sequential_table(B, W)
+    kb, vb = _pool(rng, B, n_kv, page, W, D, pcfg)
+    q = jnp.asarray(rng.normal(size=(B, H, Sq, D)), jnp.float32)
+    out = paged_flash_prefill(q, kb, vb, pt, seq_lens, q_off, cfg_kv=pcfg,
+                              causal=False, bq=4, interpret=True)
+    ref = _oracle(q, kb, vb, pt, pcfg, seq_lens=seq_lens, q_off=q_off,
+                  causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@pytest.mark.parametrize("pcfg", [None, P16_2], ids=["float", "p16"])
+def test_prefill_chunk_boundary_causality(pcfg):
+    """Prefilling a prompt in one 1 x N chunk and in two N/2 chunks must
+    produce identical rows: each chunk's queries see exactly the KV written
+    so far (seq_lens advances between chunks), never the later half."""
+    rng = np.random.default_rng(9)
+    B, n_kv, G, D, page, W, N = 2, 2, 2, 16, 8, 4, 8
+    H = n_kv * G
+    L0 = jnp.asarray([5, 11], jnp.int32)               # tokens before chunk
+    pt = _sequential_table(B, W)
+    kb, vb = _pool(rng, B, n_kv, page, W, D, pcfg)
+    q = jnp.asarray(rng.normal(size=(B, H, N, D)), jnp.float32)
+
+    whole = paged_flash_prefill(q, kb, vb, pt, L0 + N, L0, cfg_kv=pcfg,
+                                bq=4, interpret=True)
+    h = N // 2
+    first = paged_flash_prefill(q[:, :, :h], kb, vb, pt, L0 + h, L0,
+                                cfg_kv=pcfg, bq=4, interpret=True)
+    second = paged_flash_prefill(q[:, :, h:], kb, vb, pt, L0 + N, L0 + h,
+                                 cfg_kv=pcfg, bq=4, interpret=True)
+    split = jnp.concatenate([first, second], axis=2)
+    assert jnp.array_equal(whole, split), \
+        "1xN vs 2xN/2 prefill chunks disagree at the chunk boundary"
+
+
+@pytest.mark.parametrize("pcfg", [None, P16_2], ids=["float", "p16"])
+@pytest.mark.parametrize("window,softcap", [(None, None), (6, 9.0)],
+                         ids=["plain", "masked"])
+def test_contiguous_prefill_matches_blockwise(pcfg, window, softcap):
+    """The contiguous-KV entry (dense cache / training layout) vs the jnp
+    scan it dispatches around."""
+    rng = np.random.default_rng(10)
+    B, n_kv, G, D, Skv, Sq = 2, 2, 2, 16, 24, 6
+    H = n_kv * G
+    kv_len = jnp.asarray([13, 24], jnp.int32)
+    q_off = kv_len - Sq
+    kd = jnp.asarray(rng.normal(size=(B, n_kv, Skv, D)), jnp.float32)
+    vd = jnp.asarray(rng.normal(size=(B, n_kv, Skv, D)), jnp.float32)
+    kb = f32_to_posit(kd, pcfg) if pcfg is not None else kd
+    vb = f32_to_posit(vd, pcfg) if pcfg is not None else vd
+    q = jnp.asarray(rng.normal(size=(B, H, Sq, D)), jnp.float32)
+
+    out = flash_prefill_contiguous(q, kb, vb, kv_len, q_off, cfg_kv=pcfg,
+                                   window=window, softcap=softcap, bq=4,
+                                   bk=8, interpret=True)
+    ref = blockwise_attention(q, kb, vb, n_kv=n_kv, causal=True,
+                              q_offset=q_off, window=window,
+                              softcap=softcap, kv_len=kv_len, cfg_kv=pcfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+# --------------------------------------------------------------------------
+# the no-dense-materialization guarantee on the Pallas path
+# --------------------------------------------------------------------------
+def _pallas_interpret_env(monkeypatch):
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    monkeypatch.delenv("REPRO_FORCE_GATHER", raising=False)
+
+
+def test_paged_attention_fuses_all_shapes_on_pallas_path(monkeypatch):
+    """Sq > 1, softcapped Sq == 1, and windowed chunks must all take the
+    fused kernels when use_pallas(): the gather_kv fallback counter stays
+    untouched and outputs match the CPU oracle route."""
+    from repro.serving import paged_kv
+
+    rng = np.random.default_rng(11)
+    B, n_kv, G, D, page, W = 2, 2, 2, 16, 4, 4
+    H = n_kv * G
+    pt = _sequential_table(B, W)
+    kp, vp = _pool(rng, B, n_kv, page, W, D, P16_2)   # raw bits
+    from repro.core.array import PositArray
+    cases = [
+        dict(Sq=5, softcap=None, window=None),
+        dict(Sq=5, softcap=7.0, window=None),
+        dict(Sq=1, softcap=7.0, window=None),    # softcapped decode
+        dict(Sq=5, softcap=None, window=3),
+    ]
+    for case in cases:
+        Sq = case["Sq"]
+        seq_lens = jnp.asarray([6, 15], jnp.int32)
+        cache = {"k_pages": PositArray(kp, P16_2),
+                 "v_pages": PositArray(vp, P16_2),
+                 "page_table": pt, "seq_lens": seq_lens,
+                 "num_new": jnp.full((B,), Sq, jnp.int32)}
+        q = jnp.asarray(rng.normal(size=(B, H, Sq, D)), jnp.float32)
+
+        ref = paged_kv.paged_attention(q, cache, n_kv=n_kv,
+                                       softcap=case["softcap"],
+                                       window=case["window"])
+
+        _pallas_interpret_env(monkeypatch)
+        before = dict(paged_kv.GATHER_FALLBACKS)
+        out = paged_kv.paged_attention(q, cache, n_kv=n_kv,
+                                       softcap=case["softcap"],
+                                       window=case["window"])
+        monkeypatch.delenv("REPRO_USE_PALLAS")
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+        assert dict(paged_kv.GATHER_FALLBACKS) == before, \
+            f"fused path fell back to gather_kv for {case}"
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_engine_drain_on_pallas_path_no_gather_and_bit_parity(monkeypatch):
+    """A full continuous-batching drain (chunked prefill + decode + posit16
+    unembedding) through the interpret-mode kernels: steady-state prefill
+    never calls gather_kv, and greedy tokens are identical to the jnp
+    reference engine."""
+    from repro.models.transformer import ModelConfig, init_params
+    from repro.quant.policy import PositPolicy
+    from repro.serving import engine as E
+    from repro.serving import paged_kv
+
+    def _cfg(name):
+        # distinct names: the per-config jitted steps must not be shared
+        # between the reference and kernel runs
+        return ModelConfig(name=name, n_layers=2, d_model=32, n_heads=4,
+                           n_kv=2, d_ff=64, vocab=50,
+                           policy=PositPolicy(kv_cache=P16_2))
+
+    cfg = _cfg("prefill-ref")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (3, 10),
+                                            0, cfg.vocab))
+    reqs = [(prompts[i], 5) for i in range(3)]
+
+    eng = E.PagedServingEngine(params, cfg, max_seqs=3, page_size=4,
+                               table_width=8, prefill_chunk=8)
+    ref = eng.run(list(reqs))
+
+    _pallas_interpret_env(monkeypatch)
+    before = dict(paged_kv.GATHER_FALLBACKS)
+    eng2 = E.PagedServingEngine(params, _cfg("prefill-fused"), max_seqs=3,
+                                page_size=4, table_width=8, prefill_chunk=8)
+    res = eng2.run(list(reqs))
+    assert dict(paged_kv.GATHER_FALLBACKS) == before, \
+        "TPU-path serving performed a dense KV materialization"
+    for i in range(3):
+        assert np.array_equal(ref[i], res[i]), (i, ref[i], res[i])
+
+
+def test_forced_gather_fallback_is_counted(monkeypatch):
+    """The REPRO_FORCE_GATHER escape hatch (the benchmark baseline) must
+    land on the counted gather path even under use_pallas()."""
+    from repro.core.array import PositArray
+    from repro.serving import paged_kv
+
+    rng = np.random.default_rng(12)
+    B, n_kv, G, D, page, W, Sq = 2, 2, 2, 16, 4, 4, 5
+    kp, vp = _pool(rng, B, n_kv, page, W, D, P16_2)
+    cache = {"k_pages": PositArray(kp, P16_2),
+             "v_pages": PositArray(vp, P16_2),
+             "page_table": _sequential_table(B, W),
+             "seq_lens": jnp.asarray([6, 15], jnp.int32),
+             "num_new": jnp.full((B,), Sq, jnp.int32)}
+    q = jnp.asarray(rng.normal(size=(B, n_kv * G, Sq, D)), jnp.float32)
+
+    _pallas_interpret_env(monkeypatch)
+    monkeypatch.setenv("REPRO_FORCE_GATHER", "1")
+    before = paged_kv.GATHER_FALLBACKS["forced"]
+    paged_kv.paged_attention(q, cache, n_kv=n_kv)
+    assert paged_kv.GATHER_FALLBACKS["forced"] == before + 1
+
+
+# --------------------------------------------------------------------------
+# unembedding through pw_gemm (transpose_b)
+# --------------------------------------------------------------------------
+def test_pw_gemm_transpose_b_matches_ref_and_pretransposed():
+    from repro.kernels import posit_gemm as KG
+    from repro.kernels import ref as KR
+
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    w = f32_to_posit(jnp.asarray(rng.normal(size=(48, 32))), P16_2)  # [n, k]
+
+    got = KG.pw_gemm(x, w, P16_2, bm=8, bn=128, bk=32, transpose_b=True,
+                     interpret=True)
+    ref = KR.posit_gemm_ref(x, w, cfg_a=None, cfg_b=P16_2, transpose_b=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), **TOL)
+    plain = KG.pw_gemm(x, jnp.transpose(w), P16_2, bm=8, bn=128, bk=32,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(plain), **TOL)
+
+
+def test_unembed_posit_table_bit_identical_to_dense_einsum():
+    """The pw_gemm unembedding (jnp ref path here) must reproduce the old
+    decode-whole-table einsum bit for bit — same dot_general contraction,
+    no full-table f32 materialization on the kernel path."""
+    import repro.pnp as pnp
+    from repro.core.decode import decode_to_f32
+    from repro.models.blocks import unembed
+    from repro.quant.policy import NONE
+
+    rng = np.random.default_rng(14)
+    V, d = 40, 32
+    table = pnp.asarray(rng.normal(size=(V, d)).astype(np.float32), P16_2)
+    h = jnp.asarray(rng.normal(size=(2, 3, d)), jnp.float32)
+    got = unembed(h, {"table": table}, NONE)
+    want = jnp.einsum("...d,vd->...v", h,
+                      decode_to_f32(table.bits, P16_2),
+                      preferred_element_type=jnp.float32)
+    assert got.shape == (2, 3, V)
+    assert jnp.array_equal(got, want), "unembed logits changed bit pattern"
+
+
+# --------------------------------------------------------------------------
+# training: kernel forward, reference backward
+# --------------------------------------------------------------------------
+def test_fused_prefill_grads_match_reference(monkeypatch):
+    """blockwise_attention's Pallas dispatch must stay differentiable: the
+    custom_vjp backward is the jnp scan's VJP, so grads agree with the pure
+    reference to f32 accumulation noise."""
+    rng = np.random.default_rng(15)
+    B, KV, G, Sq, Skv, D = 2, 2, 2, 8, 16, 16
+    H = KV * G
+    q = jnp.asarray(rng.normal(size=(B, H, Sq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, KV, Skv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, KV, Skv, D)), jnp.float32)
+
+    def loss(q, k, v):
+        out = blockwise_attention(q, k, v, n_kv=KV, causal=True,
+                                  q_offset=Skv - Sq)
+        return (out * out).sum()
+
+    ref = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    _pallas_interpret_env(monkeypatch)
+    got = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", got, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5, err_msg=f"d{name} diverged")

@@ -181,6 +181,11 @@ def serving_param_pspecs(params, mesh):
     plus column-parallel qkv/gate bias sharding (training replicates
     biases; under TP a column-parallel output needs its bias shard-local).
     """
+    # NOTE on MoE expert parallelism: the base moe/ rules already give the
+    # serving layout once FSDP drops to replication — experts over the
+    # model axis for w_up/w_gate/w_down (the shard-local grouped GEMM +
+    # one block_psum combine in models/moe.py) and a replicated router, so
+    # every shard routes identically.  No extra entries needed.
     extra = [(r"(wq|wk|wv|wg|w_up|w_gate|wr)/b$", ("model",))]
     rules = [(re.compile(pat), spec) for pat, spec in extra + _rules()]
 

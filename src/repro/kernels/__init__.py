@@ -4,10 +4,10 @@ Each kernel module pairs pl.pallas_call + explicit BlockSpec VMEM tiling
 with a pure-jnp oracle in ref.py; ops.py is the jit'd dispatch layer.
 """
 from repro.kernels.ops import (attention, decode, divide, elementwise,
-                               encode, flash_prefill, gemm,
+                               encode, flash_prefill, gemm, grouped_matmul,
                                paged_prefill_attention, pallas_interpret,
                                pw_matmul, use_pallas)
 
-__all__ = ["gemm", "pw_matmul", "elementwise", "divide", "decode", "encode",
-           "attention", "flash_prefill", "paged_prefill_attention",
-           "use_pallas", "pallas_interpret"]
+__all__ = ["gemm", "pw_matmul", "grouped_matmul", "elementwise", "divide",
+           "decode", "encode", "attention", "flash_prefill",
+           "paged_prefill_attention", "use_pallas", "pallas_interpret"]

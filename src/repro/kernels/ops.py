@@ -12,6 +12,7 @@ PositArray; raw-bit inputs keep getting raw bits out.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
@@ -21,6 +22,7 @@ from repro.core.array import (PositArray, PositConfigMismatchError,
                               result_cfg, unwrap_kv)
 from repro.core.types import PositConfig
 from repro.kernels import flash_attention as _fa
+from repro.kernels import grouped_gemm as _ggemm
 from repro.kernels import posit_codec as _codec
 from repro.kernels import posit_elementwise as _ew
 from repro.kernels import posit_gemm as _gemm
@@ -159,6 +161,87 @@ def pw_matmul(x, w, cfg: PositConfig | None = None, *,
     x2 = x.reshape(-1, x.shape[-1])
     out = gemm(x2, w, cfg_a=None, cfg_b=cfg, transpose_b=transpose_b)
     return out.reshape(*lead, w.shape[0] if transpose_b else w.shape[-1])
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grouped_mm(static, x, w, group_offsets):
+    cfg, use_kernel, interpret = static
+    if use_kernel:
+        return _ggemm.posit_grouped_gemm(x, w, group_offsets, cfg_b=cfg,
+                                         interpret=interpret)
+    return _ref.grouped_matmul_ref(x, w, group_offsets, cfg_b=cfg)
+
+
+def _grouped_mm_fwd(static, x, w, group_offsets):
+    return _grouped_mm(static, x, w, group_offsets), (x, w, group_offsets)
+
+
+def _grouped_mm_bwd(static, res, g):
+    """jnp-reference backward (flash-attention style: the kernel owns the
+    forward, the reference owns gradient truth).  dx contracts each row
+    against its own group's transposed weight — through the grouped kernel
+    when the forward used it, so no [S, k, n] per-row weight gather ever
+    materializes; dw segment-contracts the rows back onto the group axis
+    via a one-hot three-operand einsum (XLA picks an O(S*E*max(k,n))
+    contraction, never the [S, k, n] outer-product tensor).  Integer
+    operands (posit weight bits, the offsets) carry no tangents.  This is
+    a *reference* backward, sized for QAT probes — production-scale MoE
+    training keeps the one-hot dispatch path entirely (models/moe.py) and
+    a transposed grouped kernel remains future work."""
+    cfg, use_kernel, interpret = static
+    x, w, off = res
+    if cfg is not None:
+        from repro.core.decode import decode_to_f32
+        wf = decode_to_f32(w, cfg)
+    else:
+        wf = w.astype(jnp.float32)
+    gid, inb = _ref.grouped_row_ids(off, x.shape[0])
+    g = jnp.where(inb[:, None], g.astype(jnp.float32), 0.0)
+    if use_kernel:
+        dx = _ggemm.posit_grouped_gemm(g, wf.transpose(0, 2, 1), off,
+                                       cfg_b=None, interpret=interpret)
+    else:
+        dx = jnp.einsum("sn,skn->sk", g, wf[gid],
+                        preferred_element_type=jnp.float32)
+    dx = dx.astype(x.dtype)
+    if cfg is not None:
+        return dx, None, None
+    oh = jnp.where(inb[:, None], jax.nn.one_hot(gid, w.shape[0]), 0.0)
+    dw = jnp.einsum("se,sk,sn->ekn", oh, x.astype(jnp.float32), g,
+                    preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw, None
+
+
+_grouped_mm.defvjp(_grouped_mm_fwd, _grouped_mm_bwd)
+
+
+def grouped_matmul(x, w, group_offsets, *, cfg: PositConfig | None = None,
+                   interpret: bool | None = None):
+    """Expert-sorted rows x [S, k] @ per-group weights w [E, k, n] -> [S, n]
+    f32 (the MoE grouped hot path; see models/moe.py).
+
+    Rows [group_offsets[g], group_offsets[g+1]) contract against w[g]; rows
+    at or past group_offsets[-1] come back as exact zeros.  `w` is a
+    PositArray (preferred), raw storage ints + explicit `cfg`, or a float
+    array (cfg None).  On the Pallas path the grouped kernel streams only
+    the active groups' posit tiles and decodes them in VMEM; elsewhere the
+    dense jnp reference runs.  Differentiable via jax.custom_vjp: kernel
+    forward, jnp segment-sum reference backward (posit weight bits carry no
+    tangent — training crosses the posit boundary through the STE, exactly
+    as pw_matmul does).
+    """
+    w, cfg, _ = _split(w, cfg)
+    dt = getattr(w, "dtype", None)
+    if (cfg is None and dt is not None and jnp.issubdtype(dt, jnp.integer)):
+        raise TypeError(
+            "grouped_matmul: int payload bits need their format — wrap them "
+            "with pnp.frombits(bits, cfg) or pass cfg")
+    use_kernel = use_pallas() and not force_reference()
+    if interpret is None:
+        interpret = pallas_interpret()
+    static = (cfg, use_kernel, bool(interpret))
+    return _grouped_mm(static, x, w,
+                       jnp.asarray(group_offsets, jnp.int32))
 
 
 def elementwise(op: str, *inputs, cfg: PositConfig | None = None):

@@ -31,6 +31,42 @@ def posit_gemm_ref(a, b, *, cfg_a: PositConfig | None, cfg_b: PositConfig | None
     return f32_to_posit(acc, cfg_out) if out_posit else acc
 
 
+def grouped_row_ids(group_offsets, n_rows: int):
+    """Row -> group id under the sorted-segment layout ([E+1] offsets), plus
+    the in-any-group mask (rows past offsets[-1] belong to no group)."""
+    rows = jnp.arange(n_rows)
+    gid = jnp.clip(jnp.searchsorted(group_offsets, rows, side="right") - 1,
+                   0, group_offsets.shape[0] - 2)
+    inb = (rows >= group_offsets[0]) & (rows < group_offsets[-1])
+    return gid, inb
+
+
+def grouped_matmul_ref(x, w, group_offsets, *,
+                       cfg_b: PositConfig | None = None) -> jnp.ndarray:
+    """Oracle for kernels.grouped_gemm.posit_grouped_gemm: rows of x hit
+    their own group's weight matrix; rows outside every group come back 0.
+
+    Deliberately dense on the weight side: the full w decodes to f32 —
+    this is the CPU/interpret reference, never the TPU path (the kernel
+    streams only the active groups' posit tiles).  The contraction itself
+    goes through jax.lax.ragged_dot (contiguous ascending groups, our
+    exact layout) so no [S, k, n] per-row weight gather materializes; the
+    where-mask pins the rows past group_offsets[-1], whose ragged_dot
+    values are formally undefined.
+    """
+    import jax
+    wf = decode_to_f32(w, cfg_b) if cfg_b is not None \
+        else w.astype(jnp.float32)
+    gid, inb = grouped_row_ids(group_offsets, x.shape[0])
+    sizes = (group_offsets[1:] - group_offsets[:-1]).astype(jnp.int32)
+    if hasattr(jax.lax, "ragged_dot"):
+        out = jax.lax.ragged_dot(x.astype(jnp.float32), wf, sizes)
+    else:  # older jax: the gather formulation
+        out = jnp.einsum("sk,skn->sn", x.astype(jnp.float32), wf[gid],
+                         preferred_element_type=jnp.float32)
+    return jnp.where(inb[:, None], out, 0.0)
+
+
 def elementwise_ref(op: str, *inputs, cfg: PositConfig) -> jnp.ndarray:
     fn = {"add": pops.padd, "sub": pops.psub, "mul": pops.pmul,
           "fma": pops.pfma}[op]

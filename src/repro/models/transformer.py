@@ -30,7 +30,10 @@ class MoEConfig:
     n_experts: int
     top_k: int
     capacity_factor: float = 1.25
-    group_size: int = 128      # dispatch group (see models/moe.py)
+    # capacity/dispatch group: routing drops overflow per `group_size`
+    # tokens on both MoE paths (models/moe.py — sort-based grouped GEMM on
+    # the Pallas path, GShard one-hot as the jnp oracle)
+    group_size: int = 128
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +152,12 @@ def _norm(x, p, cfg: ModelConfig):
 def _apply_block(x, p: Params, kind: str, cfg: ModelConfig, positions,
                  cache, aux):
     pol = cfg.policy
+    if cfg.moe:
+        # serving never drops: a per-group capacity would couple a token's
+        # output to the other requests sharing its batch (and break
+        # bit-parity across data-shard layouts); None also routes the
+        # Pallas path into the grouped GEMM (models/moe.py)
+        moe_cf = None if cache is not None else cfg.moe.capacity_factor
     if kind in ("attn", "attn_local"):
         h, new_cache = B.attention_block(
             _norm(x, p["ln1"], cfg), p["attn"], n_heads=cfg.n_heads,
@@ -161,7 +170,7 @@ def _apply_block(x, p: Params, kind: str, cfg: ModelConfig, positions,
             h, a = MOE.moe_block(_norm(x, p["ln2"], cfg), p["moe"],
                                  n_experts=cfg.moe.n_experts,
                                  top_k=cfg.moe.top_k, act=cfg.act, policy=pol,
-                                 capacity_factor=cfg.moe.capacity_factor,
+                                 capacity_factor=moe_cf,
                                  group_size=cfg.moe.group_size)
             aux = aux + a
         else:
@@ -185,7 +194,7 @@ def _apply_block(x, p: Params, kind: str, cfg: ModelConfig, positions,
             h, a = MOE.moe_block(_norm(x, p["ln2"], cfg), p["moe"],
                                  n_experts=cfg.moe.n_experts,
                                  top_k=cfg.moe.top_k, act=cfg.act, policy=pol,
-                                 capacity_factor=cfg.moe.capacity_factor,
+                                 capacity_factor=moe_cf,
                                  group_size=cfg.moe.group_size)
             aux = aux + a
         else:

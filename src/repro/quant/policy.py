@@ -74,16 +74,22 @@ def quantize_tree(params, cfg: PositConfig, predicate=None):
     predicate(path_str, leaf) -> bool selects which leaves quantize
     (default: every float array with >= 2 dims — matrices/tables, not
     norm scales or biases, matching the paper's DNN experiments which keep
-    normalization in high precision).  Quantized leaves come back as
-    `PositArray` (format bound to the payload), so downstream code needs no
-    `cfg` threading.
+    normalization in high precision).  Scan-stacked trees
+    (models/transformer.py) carry a leading reps dim on every leaf, so a
+    norm scale arrives as a 2-D [reps, d] array — the default predicate
+    therefore also excludes by name (scale/bias/b/lam), not just by rank.
+    Quantized leaves come back as `PositArray` (format bound to the
+    payload), so downstream code needs no `cfg` threading.
     """
     flat = jax.tree_util.tree_flatten_with_path(params)
     leaves, treedef = flat
 
+    _KEEP_F32 = ("scale", "bias", "b", "lam")
+
     def default_pred(path, x):
+        leaf_name = path.rstrip("]'").rsplit("'", 1)[-1]
         return (hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
-                and x.ndim >= 2)
+                and x.ndim >= 2 and leaf_name not in _KEEP_F32)
 
     pred = predicate or default_pred
     out = []

@@ -291,9 +291,11 @@ class PagedServingEngine:
     mesh:         a ("data", "model") jax Mesh (launch.mesh) — the fused
         step becomes one shard_map over it: sequence slots, page tables and
         a private page sub-pool per data shard; Megatron-TP weights and
-        kv-head-sharded pages over the model axis; sampling stays on device
-        (the step moves O(max_seqs) ints, never logits).  None (default):
-        the single-device step, unchanged.
+        kv-head-sharded pages over the model axis (MoE blocks shard their
+        *experts* over it instead — expert-parallel grouped GEMM with the
+        router replicated, see models/moe.py; requires n_experts % ntp ==
+        0); sampling stays on device (the step moves O(max_seqs) ints,
+        never logits).  None (default): the single-device step, unchanged.
     tp_compress:  optional PositConfig — posit-compress the gather half of
         the per-block TP psums (distributed.collectives).  Profitable on
         slow inter-chip links; costs the wire quantization, so exact
@@ -321,14 +323,18 @@ class PagedServingEngine:
             if max_seqs % ndata != 0:
                 raise ValueError(f"max_seqs={max_seqs} must divide over the "
                                  f"data axis ({ndata})")
-            for dim, nm in ((cfg.n_heads, "n_heads"), (cfg.n_kv, "n_kv"),
-                            (cfg.d_ff, "d_ff")):
+            dims = [(cfg.n_heads, "n_heads"), (cfg.n_kv, "n_kv")]
+            if cfg.moe is None:
+                dims.append((cfg.d_ff, "d_ff"))
+            else:
+                # MoE blocks shard the *expert* dim over the model axis
+                # (expert-parallel grouped GEMM, one psum per block); each
+                # expert's d_ff stays whole on its shard
+                dims.append((cfg.moe.n_experts, "moe.n_experts"))
+            for dim, nm in dims:
                 if dim % ntp != 0:
                     raise ValueError(f"cfg.{nm}={dim} must divide the model "
                                      f"axis ({ntp}) for TP serving")
-            if cfg.moe is not None and ntp > 1:
-                raise ValueError("TP over MoE blocks is not supported in "
-                                 "the sharded serving step; use model=1")
             self.n_shards = ndata
         else:
             self.n_shards = 1

@@ -216,6 +216,114 @@ def run_prefill_ttft(params, cfg, reqs, batch, page_size, table_width,
     }
 
 
+def _drain_ttft(eng, reqs):
+    """Submit `reqs` and drain, returning (mean TTFT seconds, stats dict).
+    Stats are reset first so each drain reports only its own counters."""
+    import numpy as np
+    eng.reset_stats()
+    for p, m in reqs:
+        eng.submit(p, m)
+    ttft = {}
+    t0 = time.time()
+    while eng.waiting or eng.active:
+        pairs = eng.step()
+        now = time.time()
+        for rid, _ in pairs:
+            ttft.setdefault(rid, now - t0)
+    return float(np.mean(list(ttft.values()))), eng.stats()
+
+
+def bench_prefix(smoke: bool = False, posits=("off", "p8", "p16")) -> list:
+    """Shared-prefix warm-vs-cold TTFT rows (the prefix-cache lane of
+    BENCH_prefill.json).
+
+    Workload: every request is one long common prefix plus a short unique
+    suffix, max_new=1 — the system-prompt shape prefix caching targets.
+    Three drains per posit format: cold (empty cache), warm (same prompts
+    again: admission shares the cached prefix pages and prefill restarts at
+    the first uncached token), and disjoint (fresh prompts against the warm
+    cache: the chained digests must never false-share, hit rate exactly 0).
+    cache_hit_rate = prefix_hit_tokens / submitted prompt tokens.  The
+    disjoint drain also exercises LRU eviction under pool pressure: the
+    warm cache's pages must be evicted (never preempting) to fit it."""
+    import jax
+    import numpy as np
+    from repro.models.transformer import ModelConfig, init_params
+    from repro.quant.policy import PositPolicy
+    from repro.core.types import P8_2, P16_2
+    from repro.serving.engine import PagedServingEngine
+    if smoke:
+        n_req = batch = 4
+        prefix_len, suffix_len, page_size, chunk = 448, 32, 32, 128
+    else:
+        n_req = batch = 8
+        prefix_len, suffix_len, page_size, chunk = 3584, 64, 64, 512
+    plen = prefix_len + suffix_len
+    table_width = -(-(plen + 1) // page_size)
+    rows = []
+    for posit in posits:
+        pcfg = {"p8": P8_2, "p16": P16_2, "off": None}[posit]
+        cfg = ModelConfig(name=f"bench-prefix-{posit}", n_layers=2,
+                          d_model=64, n_heads=4, n_kv=2, d_ff=128,
+                          vocab=256, policy=PositPolicy(kv_cache=pcfg))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        prefix = rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
+        shared = [(np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab, suffix_len).astype(np.int32)]
+        ), 1) for _ in range(n_req)]
+        disjoint = [(rng.integers(0, cfg.vocab, plen).astype(np.int32), 1)
+                    for _ in range(n_req)]
+
+        def mk():
+            return PagedServingEngine(
+                params, cfg, max_seqs=batch, page_size=page_size,
+                table_width=table_width, prefill_chunk=chunk,
+                admit_threshold=0)
+
+        # warmup compiles both paths: the cold drain's chunk steps and the
+        # warm drain's COW page-copy fn + full-width bucket
+        weng = mk()
+        _drain_ttft(weng, [(p.copy(), m) for p, m in shared])
+        _drain_ttft(weng, [(p.copy(), m) for p, m in shared])
+        # measured: cold once per fresh engine (best-of-2 engines), then
+        # warm best-of-2 on the populated cache
+        cold = min(_drain_ttft(mk(), [(p.copy(), m) for p, m in shared])[0]
+                   for _ in range(2))
+        eng = mk()
+        _drain_ttft(eng, [(p.copy(), m) for p, m in shared])
+        warm, st = _drain_ttft(eng, [(p.copy(), m) for p, m in shared])
+        w2, _ = _drain_ttft(eng, [(p.copy(), m) for p, m in shared])
+        warm = min(warm, w2)
+        deng = mk()
+        _drain_ttft(deng, [(p.copy(), m) for p, m in shared])
+        dis, st_dis = _drain_ttft(deng, [(p.copy(), m) for p, m in disjoint])
+        n_prompt = n_req * plen
+        row = {
+            "posit": posit, "prompt_len": plen, "prefix_len": prefix_len,
+            "ttft_cold_s": round(cold, 4), "ttft_warm_s": round(warm, 4),
+            "warm_speedup": round(cold / warm, 3),
+            "cache_hit_rate": round(st["prefix_hit_tokens"] / n_prompt, 4),
+            "disjoint_hit_rate": round(
+                st_dis["prefix_hit_tokens"] / n_prompt, 4),
+            "disjoint_evicted_pages": st_dis["evicted_pages"],
+            "disjoint_preempted": st_dis["preempted"],
+            "warm_stats": {k: st[k] for k in
+                           ("prefix_hits", "prefix_misses",
+                            "prefix_hit_tokens", "cow_copies",
+                            "deduped_pages", "evicted_pages", "preempted",
+                            "prefill_steps", "gather_fallbacks")},
+        }
+        print(f"[prefix] {posit}: cold={row['ttft_cold_s']}s "
+              f"warm={row['ttft_warm_s']}s "
+              f"speedup={row['warm_speedup']}x "
+              f"hit_rate={row['cache_hit_rate']} "
+              f"disjoint_hit_rate={row['disjoint_hit_rate']} "
+              f"stats={st}")
+        rows.append(row)
+    return rows
+
+
 def bench_prefill(smoke: bool = False, posits=("off", "p8", "p16"),
                   chunks=(128, 512)) -> dict:
     """TTFT + prefill tok/s for the fused-kernel route vs the forced
@@ -292,7 +400,8 @@ def bench_prefill(smoke: bool = False, posits=("off", "p8", "p16"),
            "note": ("fused vs gather legs only diverge on the Pallas "
                     "backend; on cpu both execute the gather reference and "
                     "the modeled roofline columns carry the signal"),
-           "rows": rows}
+           "rows": rows,
+           "prefix_rows": bench_prefix(smoke=smoke, posits=posits)}
     os.makedirs(os.path.dirname(PREFILL_RESULTS_PATH), exist_ok=True)
     with open(PREFILL_RESULTS_PATH, "w") as f:
         json.dump(res, f, indent=1)

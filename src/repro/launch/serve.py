@@ -40,6 +40,9 @@ def main():
                     help="paged: total requests to serve (default 2*batch)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged: disable content-addressed prefix caching "
+                         "of KV pages")
     ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                     help="paged: shard the serving step over a "
                          "(data, model) mesh, e.g. 4x2")
@@ -112,7 +115,8 @@ def main():
     eng = PagedServingEngine(
         params, cfg, max_seqs=args.batch, page_size=args.page_size,
         table_width=width, prefill_chunk=args.prefill_chunk,
-        temperature=args.temperature, mesh=mesh)
+        temperature=args.temperature,
+        prefix_cache=not args.no_prefix_cache, mesh=mesh)
     reqs = []
     for _ in range(n_req):
         plen = int(rng.integers(max(1, args.prompt_len // 4),
@@ -124,7 +128,7 @@ def main():
     n_tok = sum(len(v) for v in results.values())
     print(f"[serve] paged: {len(results)} requests, {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok / dt:.1f} tok/s incl. compile); "
-          f"stats={dict(eng.stats)}")
+          f"stats={eng.stats()}")
     first = results[min(results)]
     print(f"[serve] rid {min(results)}: {first[:12]}")
 

@@ -294,6 +294,18 @@ def assemble_paged_caches(pages, page_table, seq_lens, num_new):
             "rem": tuple(one(p, False) for p in pages["rem"])}
 
 
+def copy_paged_pages(pages, src, dst):
+    """Copy page `src` onto page `dst` in every layer's pools (the device
+    half of the prefix cache's copy-on-write: the host rewrites one table
+    entry, this duplicates the page contents it pointed at).  src/dst are
+    (traced) scalars — shard-local ids when the pools are shard_mapped."""
+    from repro.serving.paged_kv import copy_layer_pages
+    return {"scanned": tuple(copy_layer_pages(p, src, dst, stacked=True)
+                             for p in pages["scanned"]),
+            "rem": tuple(copy_layer_pages(p, src, dst)
+                         for p in pages["rem"])}
+
+
 def extract_paged_pages(caches):
     """Inverse of assemble_paged_caches: keep only the device-resident
     page pools (the scheduler recomputes the rest every step)."""

@@ -46,8 +46,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.transformer import (ModelConfig, assemble_paged_caches,
-                                      extract_paged_pages, forward,
-                                      init_caches, init_paged_pages)
+                                      copy_paged_pages, extract_paged_pages,
+                                      forward, init_caches, init_paged_pages)
+from repro.serving.paged_kv import GATHER_FALLBACKS, PagePool
+from repro.serving.prefix_cache import RadixIndex
 
 # python-body executions of the traced step fns — i.e. trace counts.  Tests
 # assert the steady state adds zero entries here (the retrace regression).
@@ -242,6 +244,39 @@ def _sharded_paged_step(cfg: ModelConfig, mesh, greedy: bool = True,
     return jax.jit(step, donate_argnums=(2,))
 
 
+@functools.lru_cache(maxsize=64)
+def _paged_copy(cfg: ModelConfig):
+    """Jitted whole-tree page copy (the device half of copy-on-write),
+    once per model config like the step fns.  Donates the pools so the
+    copy aliases in place instead of doubling the pool's HBM."""
+    def cp(pages, src, dst):
+        return copy_paged_pages(pages, src, dst)
+
+    return jax.jit(cp, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_paged_copy(cfg: ModelConfig, mesh):
+    """shard_map page copy: src/dst are [ndata] *shard-local* page ids
+    (copy-on-write never crosses sub-pools — dedup is shard-local so DP
+    stays bit-parity with the single-device engine).  Shards with nothing
+    to copy get (0, 0): the garbage page copied onto itself, a no-op."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import paged_pool_pspecs
+
+    def step(pages, src, dst):
+        def body(pages, src, dst):
+            return copy_paged_pages(pages, src[0], dst[0])
+
+        specs = paged_pool_pspecs(pages, mesh)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(specs, P("data"), P("data")),
+                         out_specs=specs, check_rep=False)(pages, src, dst)
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -262,6 +297,11 @@ class _Slot:
     prefill_pos: int = 0         # prompt tokens already written
     generated: list = dataclasses.field(default_factory=list)
     next_token: int = -1         # token to feed at the next decode step
+    # prefix-cache bookkeeping: deepest radix node whose page this slot
+    # holds (parent for the next registration), and the token count whose
+    # pages are already registered/matched in the index
+    node: object = None
+    reg_pos: int = 0
 
     @property
     def phase(self) -> str:
@@ -288,6 +328,19 @@ class PagedServingEngine:
         are free (or nothing is decoding / a prefill phase is already
         running) so one prefill stall amortizes over several prompts;
         default max_seqs // 2, 0 = admit eagerly
+    prefix_cache: content-addressed prefix caching over the page pool
+        (serving/prefix_cache.py), on by default.  Full pages of admitted
+        prompts (and of generated continuations) register in a per-shard
+        radix index keyed by a chained hash of the token chunks (keyed per
+        model/KV-format/page-size); a later request's admission looks up
+        its longest cached prefix, shares those pages (ref-counted) and
+        starts chunked prefill at the first uncached token — warm
+        time-to-first-token skips the shared prefix entirely, bit-identical
+        to a cold prefill because the pages hold exactly the bits a cold
+        run would recompute.  Writes into a shared page copy-on-write
+        first; idle cached pages LRU-evict under pool pressure *before*
+        any live sequence is preempted.  prefill_chunk is aligned down to
+        a page_size multiple so the cached-page skip never splits a page.
     mesh:         a ("data", "model") jax Mesh (launch.mesh) — the fused
         step becomes one shard_map over it: sequence slots, page tables and
         a private page sub-pool per data shard; Megatron-TP weights and
@@ -308,11 +361,16 @@ class PagedServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  bucket_pages: bool = True,
                  admit_threshold: int | None = None,
+                 prefix_cache: bool = True,
                  mesh=None, tp_compress=None):
         self.params, self.cfg = params, cfg
         self.max_seqs, self.page = max_seqs, page_size
         self.width = table_width
-        self.chunk = prefill_chunk
+        # chunk boundaries align to page_size multiples: warm prefill
+        # resumes at a cached-page boundary, so a chunk that straddled a
+        # page would re-prefill part of a cached page (or leave one
+        # part-written).  Rounds down, floor one page.
+        self.chunk = max(page_size, (prefill_chunk // page_size) * page_size)
         self.temperature = temperature
         self.bucket_pages = bucket_pages
         self.admit_threshold = (max_seqs // 2 if admit_threshold is None
@@ -366,8 +424,20 @@ class PagedServingEngine:
         # host scheduler state; local page 0 of every shard is its reserved
         # garbage page, and the table holds *shard-local* page ids (the
         # device step only ever sees its own sub-pool)
-        self._free = [list(range(self.pages_per_shard - 1, 0, -1))
-                      for _ in range(self.n_shards)]
+        self._pools = [PagePool(self.pages_per_shard)
+                       for _ in range(self.n_shards)]
+        # one radix index per data shard: page ids are shard-local and
+        # pages cannot migrate between sub-pools, so dedup staying
+        # shard-local is what keeps DP bit-parity with one device
+        self._prefix = None
+        self._copy_fn = None
+        if prefix_cache:
+            key = (f"{cfg.name}|kv={cfg.policy.kv_cache}|page={page_size}"
+                   f"|n_kv={cfg.n_kv}|hd={cfg.hd}")
+            self._prefix = [RadixIndex(key, page_size)
+                            for _ in range(self.n_shards)]
+            self._copy_fn = (_paged_copy(cfg) if mesh is None
+                             else _sharded_paged_copy(cfg, mesh))
         self.table = np.zeros((max_seqs, table_width), np.int32)
         self.seq_lens = np.zeros((max_seqs,), np.int32)
         self.slots: list[_Slot | None] = [None] * max_seqs
@@ -378,7 +448,9 @@ class PagedServingEngine:
         self._seed = int(seed) % (2 ** 31 - 1)
         self._step_idx = 0
         self.finished: dict[int, np.ndarray] = {}
-        self.stats = collections.Counter()
+        self.counters = collections.Counter()
+        self._gather_base = self._moe_base = 0
+        self.reset_stats()
 
         greedy = temperature <= 0.0
         if mesh is None:
@@ -394,35 +466,169 @@ class PagedServingEngine:
 
     @property
     def free_pages(self) -> list[int]:
-        """All free (shard-local) page ids, across shards."""
-        return [p for lst in self._free for p in lst]
+        """All free (shard-local) page ids, across shards.  Idle *cached*
+        prefix pages are not free — they are resident until evicted (see
+        cached_pages)."""
+        return [p for pool in self._pools for p in pool.free_list]
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages pinned by the prefix index across shards (some may also
+        be live-referenced by sequences)."""
+        return sum(pool.n_cached for pool in self._pools)
+
+    def _evict_one(self, shard: int) -> bool:
+        """LRU-evict one idle cached prefix page from `shard`'s index back
+        to the free stack.  Runs *before* preemption ever does: a cached
+        page nobody references must die before live work is rolled back."""
+        if self._prefix is None:
+            return False
+        pool = self._pools[shard]
+        pg = self._prefix[shard].evict_lru(pool.is_idle)
+        if pg is None:
+            return False
+        pool.uncache(pg)
+        self.counters["evicted_pages"] += 1
+        return True
+
+    def _alloc_page(self, i: int) -> int:
+        """One fresh page for slot i's shard: the free stack, else LRU
+        eviction of idle cached prefix pages, else preemption of a live
+        sequence (strictly in that order)."""
+        pool = self._pools[self._shard(i)]
+        while True:
+            pg = pool.try_alloc()
+            if pg is not None:
+                return pg
+            if self._evict_one(self._shard(i)):
+                continue
+            if not self._preempt(exclude=i):
+                raise RuntimeError(
+                    "KV pool exhausted and nothing left to evict or "
+                    "preempt; grow num_pages or lower max_seqs")
 
     def _ensure_pages(self, i: int, upto: int):
         """Slot i needs capacity for `upto` tokens; allocate from its
-        shard's sub-pool (and preempt within the shard if it runs dry)."""
+        shard's sub-pool (evicting idle cached pages, then preempting
+        within the shard, if it runs dry)."""
         slot = self.slots[i]
-        free = self._free[self._shard(i)]
         need = -(-upto // self.page)
         if need > self.width:
             raise ValueError(f"request {slot.req.rid}: {upto} tokens exceed "
                              f"table_width*page_size = {self.width * self.page}")
         while len(slot.pages) < need:
-            if not free:
-                if not self._preempt(exclude=i):
-                    raise RuntimeError(
-                        "KV pool exhausted and nothing left to preempt; "
-                        "grow num_pages or lower max_seqs")
-                continue
-            pg = free.pop()
+            pg = self._alloc_page(i)
             self.table[i, len(slot.pages)] = pg
             slot.pages.append(pg)
 
     def _free_slot(self, i: int):
         slot = self.slots[i]
-        self._free[self._shard(i)].extend(reversed(slot.pages))
+        pool = self._pools[self._shard(i)]
+        for pg in slot.pages:
+            pool.decref(pg)          # cached prefix pages stay resident
         self.table[i, :] = 0
         self.seq_lens[i] = 0
         self.slots[i] = None
+
+    def _maybe_cow(self, i: int):
+        """Copy-on-write: the next step writes slot i's KV starting at
+        seq_lens[i]; when that lands *mid-page* in a page the prefix index
+        or another sequence shares, copy the page device-side and point
+        slot i's table entry at the private copy first.  (Writes starting
+        at a page boundary always land in a freshly allocated page, so
+        only the first page of the write range can ever be shared.)"""
+        slot = self.slots[i]
+        if self._prefix is None or slot is None:
+            return
+        p0 = int(self.seq_lens[i])
+        j = p0 // self.page
+        if p0 % self.page == 0 or j >= len(slot.pages):
+            return
+        pg = slot.pages[j]
+        pool = self._pools[self._shard(i)]
+        if pool.ref_count(pg) <= 1 and not pool.is_cached(pg):
+            return                   # private page: write in place
+        new = self._alloc_page(i)
+        self._device_copy(self._shard(i), pg, new)
+        pool.decref(pg)
+        slot.pages[j] = new
+        self.table[i, j] = new
+        self.counters["cow_copies"] += 1
+
+    def _device_copy(self, shard: int, src: int, dst: int):
+        """Device page copy (bit-exact for posit pages: raw bits move)."""
+        if self.mesh is None:
+            self.pages = self._copy_fn(self.pages, jnp.int32(src),
+                                       jnp.int32(dst))
+        else:
+            s = np.zeros((self.n_shards,), np.int32)
+            d = np.zeros((self.n_shards,), np.int32)
+            s[shard], d[shard] = src, dst      # others: garbage no-op copy
+            self.pages = self._copy_fn(self.pages, jnp.asarray(s),
+                                       jnp.asarray(d))
+
+    def _attach_prefix(self, i: int):
+        """Longest-cached-prefix attach at admission: share the matched
+        pages (ref-counted) and start chunked prefill at the first
+        uncached token.  At least one prompt token is always re-fed so the
+        step produces first-token logits — a fully cached page-aligned
+        prompt keeps all its pages and re-feeds only the final token
+        (whose mid-page write then triggers copy-on-write)."""
+        slot = self.slots[i]
+        if self._prefix is None:
+            return
+        shard = self._shard(i)
+        idx, pool = self._prefix[shard], self._pools[shard]
+        pages, node = idx.lookup(slot.req.prompt, self._step_idx)
+        L = len(slot.req.prompt)
+        cached = min(len(pages) * self.page, L - 1)
+        if not pages or cached <= 0:
+            self.counters["prefix_misses"] += 1
+            return
+        for j, pg in enumerate(pages):
+            pool.incref(pg)
+            self.table[i, j] = pg
+        slot.pages = list(pages)
+        slot.node = node
+        slot.reg_pos = len(pages) * self.page
+        slot.prefill_pos = cached
+        self.seq_lens[i] = cached
+        self.counters["prefix_hits"] += 1
+        self.counters["prefix_hit_tokens"] += cached
+
+    def _register(self, i: int):
+        """Register slot i's newly filled pages in its shard's radix index
+        (each page's content address covers the whole token prefix it
+        completes).  An identical page already cached gets *adopted*: the
+        slot's table entry swaps to the existing page and its own copy
+        frees — safe because both hold bit-identical KV."""
+        slot = self.slots[i]
+        if self._prefix is None or slot is None:
+            return
+        written = int(self.seq_lens[i])
+        if slot.reg_pos + self.page > written:
+            return
+        shard = self._shard(i)
+        idx, pool = self._prefix[shard], self._pools[shard]
+        if slot.node is None:
+            slot.node = idx.root
+        stream = np.concatenate([slot.req.prompt,
+                                 np.asarray(slot.generated, np.int32)])
+        while slot.reg_pos + self.page <= written:
+            j = slot.reg_pos // self.page
+            chunk = stream[slot.reg_pos:slot.reg_pos + self.page]
+            node, existing = idx.insert(slot.node, chunk, slot.pages[j],
+                                        self._step_idx)
+            if existing is not None and existing != slot.pages[j]:
+                pool.incref(existing)
+                pool.decref(slot.pages[j])     # private copy -> freed
+                slot.pages[j] = existing
+                self.table[i, j] = existing
+                self.counters["deduped_pages"] += 1
+            elif existing is None:
+                pool.cache(slot.pages[j])
+            slot.node = node
+            slot.reg_pos += self.page
 
     def _preempt(self, exclude: int) -> bool:
         """Evict the youngest other sequence *in the same shard* (pages
@@ -445,7 +651,7 @@ class PagedServingEngine:
                                         prior=np.concatenate([req.prior,
                                                               gen])))
         self._free_slot(i)
-        self.stats["preempted"] += 1
+        self.counters["preempted"] += 1
         return True
 
     def _admit(self):
@@ -461,29 +667,41 @@ class PagedServingEngine:
         if ("decode" in phases and "prefill" not in phases
                 and n_free < max(1, self.admit_threshold)):
             return
-        for i in range(self.max_seqs):
-            if not self.waiting:
-                return
-            if self.slots[i] is not None:
-                continue
+        while self.waiting:
             req = self.waiting[0]
-            # admit when the prompt (+ first generated token) fits this
-            # slot's shard sub-pool
-            need = -(-(len(req.prompt) + 1) // self.page)
-            if need > len(self._free[self._shard(i)]):
-                if self.active == 0 and all(
-                        need > len(f) for f in self._free):
+            # pick the free slot whose shard caches the longest prefix of
+            # this prompt (ties -> lowest slot, the pre-prefix-cache
+            # behavior); a slot only qualifies when the pages the prompt
+            # still needs fit its shard's free + evictable headroom
+            best = None
+            for i in range(self.max_seqs):
+                if self.slots[i] is not None:
+                    continue
+                pool = self._pools[self._shard(i)]
+                hit = (self._prefix[self._shard(i)].probe(req.prompt)
+                       if self._prefix is not None else 0)
+                n_match = hit // self.page
+                need = -(-(len(req.prompt) + 1) // self.page) - n_match
+                avail = pool.n_free + max(0, pool.n_evictable - n_match)
+                if need > avail:
+                    continue
+                cached = min(hit, len(req.prompt) - 1)
+                if best is None or (cached, -i) > best[0]:
+                    best = ((cached, -i), i)
+            if best is None:
+                if self.active == 0:
                     raise RuntimeError(
-                        f"request {req.rid} needs {need} pages but the idle "
-                        f"pool only has {len(self.free_pages)} "
-                        f"(max {max(len(f) for f in self._free)} in one "
-                        f"shard); grow num_pages")
-                continue
+                        f"request {req.rid} does not fit the idle pool "
+                        f"({len(self.free_pages)} free pages across "
+                        f"{self.n_shards} shard(s)); grow num_pages")
+                return
+            i = best[1]
             self.waiting.popleft()
             self.slots[i] = _Slot(req=req, admit_order=self._admitted,
                                   pages=[])
             self._admitted += 1
-            self.stats["admitted"] += 1
+            self.counters["admitted"] += 1
+            self._attach_prefix(i)
 
     # ---- public API ------------------------------------------------------
     def submit(self, prompt, max_new: int, rid: int | None = None) -> int:
@@ -508,12 +726,47 @@ class PagedServingEngine:
             # results in `finished`
             raise ValueError(f"request id {rid} is already in use")
         self._next_rid = max(self._next_rid, rid + 1)
+        if self._prefix is not None:
+            # submit-time longest-cached-prefix probe (read-only: the
+            # authoritative, LRU-touching lookup happens at admission,
+            # when the slot — hence the shard — is known)
+            self.counters["prefix_probe_tokens"] += max(
+                idx.probe(prompt) for idx in self._prefix)
         self.waiting.append(Request(rid, prompt, max_new))
         return rid
 
     @property
     def active(self) -> int:
         return sum(s is not None for s in self.slots)
+
+    # ---- observability ---------------------------------------------------
+    def stats(self) -> dict:
+        """Scheduler + prefix-cache counters (the serving bench prints
+        this).  Fallback counters are process-global; they are reported as
+        deltas since engine construction or the last reset_stats()."""
+        from repro.models.moe import DENSE_MOE_FALLBACKS
+        d = {k: 0 for k in ("admitted", "finished", "preempted",
+                            "prefill_steps", "decode_steps",
+                            "prefix_hits", "prefix_misses",
+                            "prefix_hit_tokens", "prefix_probe_tokens",
+                            "evicted_pages", "cow_copies",
+                            "deduped_pages")}
+        d.update(self.counters)
+        d["gather_fallbacks"] = (sum(GATHER_FALLBACKS.values())
+                                 - self._gather_base)
+        d["dense_moe_fallbacks"] = (sum(DENSE_MOE_FALLBACKS.values())
+                                    - self._moe_base)
+        d["free_pages"] = sum(p.n_free for p in self._pools)
+        d["cached_pages"] = self.cached_pages
+        return d
+
+    def reset_stats(self):
+        """Zero the counters and re-baseline the global fallback counters
+        (the tests' reset hook; several drains can share one engine)."""
+        from repro.models.moe import DENSE_MOE_FALLBACKS
+        self.counters.clear()
+        self._gather_base = sum(GATHER_FALLBACKS.values())
+        self._moe_base = sum(DENSE_MOE_FALLBACKS.values())
 
     def _sample_host(self, logits_row: np.ndarray) -> int:
         """Host-side sampling oracle.  The engine samples on device inside
@@ -568,7 +821,7 @@ class PagedServingEngine:
                 self.finished[slot.req.rid] = np.concatenate(
                     [slot.req.prior, np.asarray(slot.generated, np.int32)])
                 self._free_slot(i)
-                self.stats["finished"] += 1
+                self.counters["finished"] += 1
         self._admit()
 
         prefilling = [i for i, s in enumerate(self.slots)
@@ -576,7 +829,10 @@ class PagedServingEngine:
         emitted: list[tuple[int, int]] = []
         if prefilling:
             # page in first: allocation may preempt a slot (even one in
-            # `prefilling`), so the batch is built only from survivors
+            # `prefilling`), so the batch is built only from survivors.
+            # _maybe_cow runs after paging: a warm slot resuming mid-page
+            # (fully cached page-aligned prompt) must write into a private
+            # copy, never the shared page.
             for i in prefilling:
                 s = self.slots[i]
                 if s is None:
@@ -584,6 +840,7 @@ class PagedServingEngine:
                 part_len = min(self.chunk,
                                len(s.req.prompt) - s.prefill_pos)
                 self._ensure_pages(i, int(self.seq_lens[i]) + part_len)
+                self._maybe_cow(i)
             alive = [i for i in prefilling if self.slots[i] is not None]
             if not alive:
                 return emitted
@@ -603,7 +860,8 @@ class PagedServingEngine:
                     s.generated.append(tok)
                     s.next_token = tok
                     emitted.append((s.req.rid, tok))
-            self.stats["prefill_steps"] += 1
+                self._register(i)
+            self.counters["prefill_steps"] += 1
             return emitted
 
         decoding = [i for i, s in enumerate(self.slots)
@@ -613,6 +871,7 @@ class PagedServingEngine:
         for i in decoding:
             if self.slots[i] is not None:
                 self._ensure_pages(i, int(self.seq_lens[i]) + 1)
+                self._maybe_cow(i)
         decoding = [i for i in decoding if self.slots[i] is not None]
         if not decoding:
             return emitted
@@ -628,7 +887,8 @@ class PagedServingEngine:
             s.generated.append(tok)
             s.next_token = tok
             emitted.append((s.req.rid, tok))
-        self.stats["decode_steps"] += 1
+            self._register(i)
+        self.counters["decode_steps"] += 1
         return emitted
 
     def run(self, requests=None, max_steps: int | None = None

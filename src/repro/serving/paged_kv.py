@@ -56,6 +56,139 @@ GARBAGE_PAGE = 0   # page index reserved for masked/invalid writes
 GATHER_FALLBACKS: collections.Counter = collections.Counter()
 
 
+class PagePool:
+    """Host-side page allocator for one (shard-local) sub-pool, with
+    refcounts and prefix-cache pinning.
+
+    States a page id can be in (page 0, the reserved garbage page, is in
+    none of them — it is never allocated, cached, or freed):
+
+      free    — on the free stack, contents dead;
+      live    — refcount >= 1: referenced by that many sequences' page
+                tables (>1 means a prefix page shared across sequences);
+      cached  — pinned by the prefix index (serving.prefix_cache).  A page
+                can be live *and* cached; a cached page whose refcount
+                drops to 0 stays resident as an evictable prefix page
+                instead of returning to the free stack.
+
+    Invariants (enforced loudly; tests/test_prefix_cache.py drives them
+    with hypothesis): refcounts never go negative, a page is never freed
+    twice, the garbage page is never handed out, and
+    free + live + idle-cached == num_pages - 1 at all times."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least the garbage page + one page")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))   # pop() -> page 1 first
+        self._ref: dict[int, int] = {}
+        self._cached: set[int] = set()
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def free_list(self) -> list[int]:
+        return list(self._free)
+
+    @property
+    def n_cached(self) -> int:
+        return len(self._cached)
+
+    @property
+    def n_evictable(self) -> int:
+        """Cached pages no live sequence references (LRU-eviction fodder)."""
+        return sum(1 for p in self._cached if p not in self._ref)
+
+    def ref_count(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def is_cached(self, page: int) -> bool:
+        return page in self._cached
+
+    def is_idle(self, page: int) -> bool:
+        return page not in self._ref
+
+    # ---- allocation ------------------------------------------------------
+    def _check(self, page: int):
+        if not 0 < page < self.num_pages:
+            raise ValueError(f"page {page} out of range (garbage page 0 "
+                             f"never participates)")
+
+    def try_alloc(self) -> int | None:
+        """Pop a free page with refcount 1, or None when the stack is dry
+        (the engine then evicts cached pages / preempts)."""
+        if not self._free:
+            return None
+        page = self._free.pop()
+        if page in self._ref or page in self._cached:
+            raise AssertionError(f"page {page} on the free stack while "
+                                 f"live/cached")
+        self._ref[page] = 1
+        return page
+
+    def incref(self, page: int):
+        """One more sequence references `page` (prefix-cache hit; also
+        revives an idle cached page)."""
+        self._check(page)
+        if page not in self._ref and page not in self._cached:
+            raise ValueError(f"incref of free page {page}")
+        self._ref[page] = self._ref.get(page, 0) + 1
+
+    def decref(self, page: int):
+        """One fewer reference; at 0 the page frees unless the prefix
+        index still pins it (then it stays resident, evictable)."""
+        self._check(page)
+        if self._ref.get(page, 0) <= 0:
+            raise ValueError(f"decref of page {page} with no references "
+                             f"(double free?)")
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            del self._ref[page]
+            if page not in self._cached:
+                self._free.append(page)
+
+    # ---- prefix-cache pinning --------------------------------------------
+    def cache(self, page: int):
+        """Pin `page` as prefix-cache resident (it must be live — pages
+        are registered while their owner still holds them)."""
+        self._check(page)
+        if page not in self._ref and page not in self._cached:
+            raise ValueError(f"cache of free page {page}")
+        self._cached.add(page)
+
+    def uncache(self, page: int) -> bool:
+        """Unpin `page` (eviction); frees it if no sequence holds it.
+        Returns True when the page returned to the free stack."""
+        self._check(page)
+        if page not in self._cached:
+            raise ValueError(f"uncache of page {page} that is not cached")
+        self._cached.remove(page)
+        if page not in self._ref:
+            self._free.append(page)
+            return True
+        return False
+
+
+def copy_layer_pages(pages: dict, src, dst, stacked: bool = False) -> dict:
+    """Copy page `src` onto page `dst` in one layer's pools (the device
+    half of copy-on-write; posit pages copy as raw bits, so the copy is
+    bit-identical by construction).  src/dst may be traced scalars;
+    stacked=True for scan-stacked pools ([reps, num_pages, ...])."""
+    def cp(buf):
+        if stacked:
+            return buf.at[:, dst].set(buf[:, src])
+        return buf.at[dst].set(buf[src])
+
+    kp, vp = pages["k_pages"], pages["v_pages"]
+    if isinstance(kp, PositArray):
+        return {"k_pages": PositArray(cp(kp.bits), kp.cfg),
+                "v_pages": PositArray(cp(vp.bits), vp.cfg)}
+    return {"k_pages": cp(kp), "v_pages": cp(vp)}
+
+
 def init_layer_pages(num_pages: int, n_kv: int, page_size: int, head_dim: int,
                      cfg: PositConfig | None, dtype=jnp.float32):
     """One attention layer's page pools: {"k_pages", "v_pages"}."""

@@ -1,0 +1,186 @@
+"""Prefix cache: a content-addressed radix index over posit KV pages.
+
+At production traffic most requests share a system prompt or few-shot
+template, yet every admission used to re-prefill it from scratch.  KV at a
+position depends only on the token stream up to that position (and the
+absolute positions themselves), so a *full* page — the KV for tokens
+[j*page_size, (j+1)*page_size) of some prefix — can be shared verbatim by
+every sequence whose first (j+1)*page_size tokens match.  Because the paged
+pool stores posit8/16 pages (paper C4/C6), the same HBM holds 2-4x more
+cached prefix tokens than an f32 serving stack — this module is what turns
+that density into time-to-first-token.
+
+Design (host-side; the device never sees any of this — shared pages are
+just page-table entries appearing in several sequences' rows):
+
+  * **Content addressing.**  Each full page is keyed by a chained digest:
+    ``digest_j = blake2b(digest_{j-1} + tokens_j.tobytes())`` with the root
+    digest seeded from a per-(model, KV format, page size) key, so caches
+    of different models/formats can never alias.  The chain makes the key
+    cover the *whole* prefix, not just the local chunk — two prompts that
+    share page 3's tokens but differ in page 0 hash to different keys.
+
+  * **Radix index.**  Digests are arranged in a trie whose path from the
+    root spells the prefix page by page: ``lookup(prompt)`` walks full-page
+    chunks and returns the longest cached prefix's pages, ``insert``
+    registers a freshly filled page under its parent (deduping against an
+    existing identical page — the caller adopts the existing page id and
+    frees its own copy, since the contents are bit-identical by
+    construction).  One index per data shard: page ids are shard-local and
+    pages cannot migrate between sub-pools, which also keeps the
+    data-parallel engine's behavior bitwise independent per shard.
+
+  * **Sharing & eviction.**  Live refcounts stay in paged_kv.PagePool; the
+    index *pins* registered pages so a retiring sequence's prefix pages
+    stay resident (ref 0, pinned) instead of returning to the free list.
+    Under pool pressure the engine LRU-evicts pinned ref-0 *leaf* pages
+    (children always die before parents, so an interior page is never
+    orphaned) before it ever preempts a live sequence.  Copy-on-write is
+    the engine's job: a write landing mid-page in a shared page first
+    copies the page device-side and rewrites the owner's table entry.
+
+The scheduler fields this module keeps per node are O(1); the whole index
+is O(cached pages) host memory and never enters a jitted computation.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+__all__ = ["RadixIndex", "chunk_digest", "root_digest"]
+
+
+def root_digest(key: str) -> bytes:
+    """Root of the digest chain: the model/format/page-size cache key."""
+    return hashlib.blake2b(key.encode(), digest_size=16).digest()
+
+
+def chunk_digest(parent: bytes, tokens: np.ndarray) -> bytes:
+    """Chained content address of one full page of tokens."""
+    tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    return hashlib.blake2b(parent + tokens.tobytes(),
+                           digest_size=16).digest()
+
+
+class _Node:
+    """One cached full page.  The path root -> node spells a prefix."""
+    __slots__ = ("digest", "tokens", "page", "parent", "children",
+                 "last_used")
+
+    def __init__(self, digest: bytes, tokens: np.ndarray, page: int,
+                 parent: "_Node | None", last_used: int):
+        self.digest = digest
+        self.tokens = tokens
+        self.page = page
+        self.parent = parent
+        self.children: dict[bytes, _Node] = {}
+        self.last_used = last_used
+
+
+class RadixIndex:
+    """Trie of content-addressed cached pages for one page sub-pool.
+
+    All methods are host-side bookkeeping; refcount/pinning side effects
+    are the caller's (the engine pairs every lookup with PagePool.incref
+    and every insert with PagePool.cache)."""
+
+    def __init__(self, key: str, page_size: int):
+        self.page = page_size
+        self.root = _Node(root_digest(key), np.zeros((0,), np.int32), -1,
+                          None, 0)
+        self.by_page: dict[int, _Node] = {}
+
+    def __len__(self) -> int:
+        return len(self.by_page)
+
+    def _child(self, node: _Node, chunk: np.ndarray) -> "_Node | None":
+        d = chunk_digest(node.digest, chunk)
+        c = node.children.get(d)
+        if c is not None and not np.array_equal(c.tokens, chunk):
+            return None          # 128-bit collision guard: treat as a miss
+        return c
+
+    def lookup(self, tokens: np.ndarray, clock: int):
+        """Longest cached prefix of `tokens`, full pages only.
+
+        Returns (pages, deepest_node); touches every matched node's LRU
+        stamp.  The caller must incref each returned page before anything
+        can evict it."""
+        tokens = np.asarray(tokens, np.int32)
+        node, pages = self.root, []
+        for lo in range(0, len(tokens) - self.page + 1, self.page):
+            c = self._child(node, tokens[lo:lo + self.page])
+            if c is None:
+                break
+            c.last_used = clock
+            pages.append(c.page)
+            node = c
+        return pages, node
+
+    def probe(self, tokens: np.ndarray) -> int:
+        """Read-only longest-cached-prefix length in tokens (no LRU
+        touch) — the submit()-time lookup feeding scheduling stats."""
+        tokens = np.asarray(tokens, np.int32)
+        node, n = self.root, 0
+        for lo in range(0, len(tokens) - self.page + 1, self.page):
+            c = self._child(node, tokens[lo:lo + self.page])
+            if c is None:
+                break
+            n += self.page
+            node = c
+        return n
+
+    def insert(self, parent: _Node, chunk: np.ndarray, page: int,
+               clock: int):
+        """Register `page` as holding `chunk`'s KV under `parent`.
+
+        Returns (node, existing_page): existing_page is not None when an
+        identical page was already cached — the caller should adopt it
+        (swap its table entry, incref the existing page, decref its own
+        copy) because the two pages are bit-identical."""
+        chunk = np.asarray(chunk, np.int32).copy()
+        if len(chunk) != self.page:
+            raise ValueError(f"can only register full pages "
+                             f"({len(chunk)} != {self.page})")
+        d = chunk_digest(parent.digest, chunk)
+        c = parent.children.get(d)
+        if c is not None and np.array_equal(c.tokens, chunk):
+            c.last_used = clock
+            return c, c.page
+        node = _Node(d, chunk, page, parent, clock)
+        parent.children[d] = node
+        self.by_page[page] = node
+        return node, None
+
+    def evict_lru(self, is_idle) -> int | None:
+        """Drop the least-recently-used evictable page and return its id
+        (None if nothing is evictable).  Evictable: a *leaf* (interior
+        pages outlive their children, so a cached chain never dangles)
+        whose page `is_idle` (refcount 0) says no live sequence shares."""
+        victim = None
+        for n in self.by_page.values():
+            if n.children or not is_idle(n.page):
+                continue
+            if victim is None or n.last_used < victim.last_used:
+                victim = n
+        if victim is None:
+            return None
+        del victim.parent.children[victim.digest]
+        del self.by_page[victim.page]
+        return victim.page
+
+    def drop_page(self, page: int):
+        """Unregister `page` (and its now-unreachable descendants) — used
+        when the engine must invalidate rather than evict in LRU order."""
+        node = self.by_page.get(page)
+        if node is None:
+            return []
+        stack, dropped = [node], []
+        del node.parent.children[node.digest]
+        while stack:
+            n = stack.pop()
+            dropped.append(n.page)
+            del self.by_page[n.page]
+            stack.extend(n.children.values())
+        return dropped

@@ -178,6 +178,76 @@ def bench_all(smoke: bool = False, posit: str = "p16") -> dict:
 
 
 # --------------------------------------------------------------------------
+# recurrent / hybrid serving lane (posit state pool vs paged KV)
+# --------------------------------------------------------------------------
+RECURRENT_ARCHS = ("rwkv6-3b", "recurrentgemma-9b")
+
+
+def bench_recurrent(smoke: bool = True, posit: str = "p16") -> dict:
+    """State-pool serving rows: paged-engine tok/s for the recurrent and
+    hybrid archs vs a same-width full-attention comparator (identical stack
+    with block_pattern=("attn",) — what serving these models cost before
+    the state-pool backend), plus analytic per-seq cache bytes at
+    4k/16k/64k contexts from the backends' memory descriptors.  The bytes
+    columns are the headline: state slots are O(1) in context and windowed
+    KV is O(window), vs the comparator's O(context) pool."""
+    import dataclasses as dc
+    import jax
+    from repro import configs
+    from repro.core.types import P8_2, P16_2
+    from repro.models.transformer import init_params
+    from repro.quant.policy import PositPolicy
+    from repro.serving.backends import layout_for
+    pcfg = {"p8": P8_2, "p16": P16_2, "off": None}[posit]
+    policy = PositPolicy(kv_cache=pcfg)
+    if smoke:
+        n_req, min_len, max_len, batch = 8, 16, 96, 4
+        page_size, prefill_chunk, max_new = 16, 32, 8
+    else:
+        n_req, min_len, max_len, batch = 16, 64, 512, 8
+        page_size, prefill_chunk, max_new = 32, 128, 16
+    table_width = -(-(max_len + max_new) // page_size)
+    rows = []
+    for arch in RECURRENT_ARCHS:
+        cfg = configs.get_smoke(arch, policy=policy)
+        cfg = dc.replace(cfg, name=f"{cfg.name}-bench-{posit}")
+        comp = dc.replace(cfg, block_pattern=("attn",), window=None,
+                          name=f"{cfg.name}-attn")
+        reqs = make_workload(n_req, min_len, max_len, max_new, max_new,
+                             cfg.vocab, seed=3)
+        n_tok = sum(m for _, m in reqs)
+        times = {}
+        for key, c in (("state_pool", cfg), ("full_attn", comp)):
+            params = init_params(jax.random.PRNGKey(0), c)
+            run_paged(params, c, reqs, batch, page_size, table_width,
+                      prefill_chunk)            # warmup: compile every bucket
+            times[key] = min(run_paged(params, c, reqs, batch, page_size,
+                                       table_width, prefill_chunk)
+                             for _ in range(2))
+        # memory columns use the *full-size* configs: the smoke stack is
+        # too small for the O(1)-vs-O(context) gap to register
+        full = configs.get_config(arch, policy=policy)
+        comp_full = dc.replace(full, block_pattern=("attn",), window=None)
+        mem = {
+            str(ctx): {
+                "bytes_per_seq": layout_for(full).cache_bytes_per_seq(
+                    ctx, 64),
+                "full_attn_bytes_per_seq":
+                    layout_for(comp_full).cache_bytes_per_seq(ctx, 64),
+            } for ctx in (4096, 16384, 65536)}
+        rows.append({
+            "arch": arch, "posit": posit,
+            "tok_s": round(n_tok / times["state_pool"], 2),
+            "full_attn_tok_s": round(n_tok / times["full_attn"], 2),
+            "cache_bytes_per_seq_full_model": mem,
+        })
+        print(f"[recurrent] {arch}: {rows[-1]['tok_s']} tok/s "
+              f"(full-attn comparator {rows[-1]['full_attn_tok_s']})")
+    return {"smoke": smoke, "posit": posit, "n_req": n_req,
+            "prompt_lens": [min_len, max_len], "rows": rows}
+
+
+# --------------------------------------------------------------------------
 # prefill / time-to-first-token lane (the fused paged prefill kernel vs the
 # gather_kv dense-materialization baseline it replaced)
 # --------------------------------------------------------------------------
@@ -492,9 +562,19 @@ def run(report):
 
 
 def _write(res: dict):
+    """Merge `res` into BENCH_serving.json (the dense-vs-paged rows and the
+    --recurrent rows are separate CI steps writing disjoint keys)."""
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    merged = {}
+    if os.path.exists(RESULTS_PATH):
+        try:
+            with open(RESULTS_PATH) as f:
+                merged = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            merged = {}
+    merged.update(res)
     with open(RESULTS_PATH, "w") as f:
-        json.dump(res, f, indent=1)
+        json.dump(merged, f, indent=1)
     print(f"wrote {os.path.normpath(RESULTS_PATH)}")
 
 
@@ -508,6 +588,10 @@ def main():
     ap.add_argument("--prefill", action="store_true",
                     help="TTFT + prefill tok/s: fused paged prefill kernel "
                          "vs the gather_kv baseline -> BENCH_prefill.json")
+    ap.add_argument("--recurrent", action="store_true",
+                    help="recurrent/hybrid state-pool serving vs a full-"
+                         "attention comparator -> BENCH_serving.json "
+                         "'recurrent' key")
     ap.add_argument("--sharded-worker", type=int, default=None,
                     help=argparse.SUPPRESS)
     args = ap.parse_args()
@@ -521,6 +605,11 @@ def main():
         return
     if args.prefill:
         print(json.dumps(bench_prefill(smoke=args.smoke), indent=1))
+        return
+    if args.recurrent:
+        res = bench_recurrent(smoke=args.smoke, posit=args.posit)
+        print(json.dumps(res, indent=1))
+        _write({"recurrent": res})
         return
     res = bench_all(smoke=args.smoke, posit=args.posit)
     print(json.dumps(res, indent=1))

@@ -201,25 +201,52 @@ def serving_param_pspecs(params, mesh):
 
 
 def paged_pool_pspecs(pages, mesh):
-    """Paged KV pool specs: the page dim shards over 'data' (each DP shard
-    owns a private sub-pool with its own garbage page — the host scheduler
-    in serving.engine allocates shard-locally), kv heads over 'model' when
-    they divide (the TP attention heads live next to their pages).  Leaves
-    are [num_pages, n_kv, page, D], with a leading stacked-reps dim for
-    scanned layer groups."""
-    from repro.core.array import PositArray
+    """Serving pool specs, per backend (serving/backends.py):
 
-    def assign(leaf):
+    Paged KV leaves [.., num_pages, n_kv, page, D]: the page dim shards over
+    'data' (each DP shard owns a private sub-pool with its own garbage page
+    — the host scheduler in serving.engine allocates shard-locally), kv
+    heads over 'model' when they divide (the TP attention heads live next
+    to their pages).
+
+    State-pool leaves (wkv/tshift/cshift/h/conv): the slot dim shards over
+    'data' (slots are striped across DP shards exactly like the page-table
+    rows), and the wkv head dim over 'model' when it divides (head-sharded
+    state; the engine currently rejects TP for recurrent patterns, so this
+    is layout support, not a dispatch path).
+
+    Leaves may carry a leading stacked-reps dim for scanned layer groups.
+    """
+    from repro.core.array import PositArray
+    from repro.serving.backends import _STATE_BASE_NDIM
+
+    def kv_assign(leaf):
         spec = [None] * leaf.ndim
         spec[leaf.ndim - 4] = "data"
         if leaf.shape[leaf.ndim - 3] % _axis_size(mesh, "model") == 0:
             spec[leaf.ndim - 3] = "model"
         return P(*spec)
 
-    # stop at PositArray (one spec covers its bits leaf): the spec tree
-    # stays a plain-P prefix tree usable by shard_map and device_put alike
-    return jax.tree_util.tree_map(
-        assign, pages, is_leaf=lambda x: isinstance(x, PositArray))
+    def state_assign(name, leaf):
+        slot = leaf.ndim - _STATE_BASE_NDIM[name]     # 0 unstacked, 1 stacked
+        spec = [None] * leaf.ndim
+        spec[slot] = "data"
+        if (name == "wkv"
+                and leaf.shape[slot + 1] % _axis_size(mesh, "model") == 0):
+            spec[slot + 1] = "model"
+        return P(*spec)
+
+    def layer(p):
+        if "k_pages" in p:
+            # stop at PositArray (one spec covers its bits leaf): the spec
+            # tree stays a plain-P prefix tree usable by shard_map and
+            # device_put alike
+            return jax.tree_util.tree_map(
+                kv_assign, p, is_leaf=lambda x: isinstance(x, PositArray))
+        return {k: state_assign(k, v) for k, v in p.items()}
+
+    return {"scanned": tuple(layer(p) for p in pages["scanned"]),
+            "rem": tuple(layer(p) for p in pages["rem"])}
 
 
 def opt_state_pspecs(opt_state, param_specs, mesh):

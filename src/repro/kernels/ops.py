@@ -12,6 +12,7 @@ PositArray; raw-bit inputs keep getting raw bits out.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import os
 
@@ -311,6 +312,73 @@ def paged_prefill_attention(q, k_pages, v_pages, page_table, seq_lens,
     return _fa.paged_flash_prefill(
         q, k_pages, v_pages, page_table, seq_lens, q_offset, cfg_kv=cfg_kv,
         causal=causal, window=window, softcap=softcap, interpret=interpret)
+
+
+# Serving-path recurrent scans (RWKV6 WKV / rGLRU).  Every dispatch that
+# does NOT take the fused Pallas kernel is counted here, keyed by why
+# ("forced": REPRO_FORCE_GATHER overrode an available kernel;
+# "jnp-reference": no Pallas backend) — the recurrent analogue of
+# paged_kv.GATHER_FALLBACKS, asserted zero by the kernel-path serving tests.
+RECURRENT_FALLBACKS = collections.Counter()
+
+
+def wkv_scan(r, k, v, logw, u, s0, *, num_new=None,
+             cfg_state: PositConfig | None = None):
+    """RWKV6 WKV recurrence over a chunk (the serving scan core).
+
+    r/k/v/logw [B, H, T, dh], u [H, dh].  s0 [B, H, dh, dh] is the carried
+    state: a PositArray (the paged engine's posit state pool — decoded in
+    VMEM, f32-accumulated, re-encoded in-kernel) or an f32 array (dense
+    cache tuples / posit-off serving).  Under a posit state format
+    (PositArray s0, or explicit `cfg_state` for f32 state under a posit KV
+    policy) the state is round-tripped through the format after *every*
+    token, so the scan is invariant to prefill chunking and the dense and
+    pooled representations compute identical values.  num_new [B] masks
+    per-slot ragged chunks (None = every row advances all T tokens).
+    Returns (y [B, H, T, dh] f32, s_fin in s0's representation).
+    """
+    from repro.kernels import recurrent_scan as _rs
+    s0_raw, cfg_state, posit_state = _split(s0, cfg_state)
+    B, _, T, _ = r.shape
+    nn = (jnp.full((B,), T, jnp.int32) if num_new is None
+          else jnp.asarray(num_new, jnp.int32))
+    if use_pallas() and not force_reference():
+        y, sf = _rs.wkv_scan_pallas(r, k, v, logw, u, s0_raw, nn,
+                                    cfg_state=cfg_state,
+                                    posit_state=posit_state,
+                                    interpret=pallas_interpret())
+    else:
+        RECURRENT_FALLBACKS["forced" if use_pallas()
+                            else "jnp-reference"] += 1
+        y, sf = _rs.wkv_scan_ref(r, k, v, logw, u, s0_raw, nn,
+                                 cfg_state=cfg_state,
+                                 posit_state=posit_state)
+    return y, PositArray(sf, cfg_state) if posit_state else sf
+
+
+def rglru_scan(a, b, h0, *, num_new=None,
+               cfg_state: PositConfig | None = None):
+    """rGLRU recurrence h_t = rt(a_t h + b_t) over a chunk (Griffin /
+    RecurrentGemma serving core); a/b [B, T, d] are the batched gate
+    projections.  h0 [B, d] follows the same PositArray-or-f32 state (and
+    `cfg_state` round-trip) contract as `wkv_scan`.  Returns
+    (h_seq [B, T, d] f32, h_fin in h0's representation)."""
+    from repro.kernels import recurrent_scan as _rs
+    h0_raw, cfg_state, posit_state = _split(h0, cfg_state)
+    B, T, _ = a.shape
+    nn = (jnp.full((B,), T, jnp.int32) if num_new is None
+          else jnp.asarray(num_new, jnp.int32))
+    if use_pallas() and not force_reference():
+        h, hf = _rs.rglru_scan_pallas(a, b, h0_raw, nn,
+                                      cfg_state=cfg_state,
+                                      posit_state=posit_state,
+                                      interpret=pallas_interpret())
+    else:
+        RECURRENT_FALLBACKS["forced" if use_pallas()
+                            else "jnp-reference"] += 1
+        h, hf = _rs.rglru_scan_ref(a, b, h0_raw, nn, cfg_state=cfg_state,
+                                   posit_state=posit_state)
+    return h, PositArray(hf, cfg_state) if posit_state else hf
 
 
 def flash_prefill(q, k, v, kv_len, q_offset, *,

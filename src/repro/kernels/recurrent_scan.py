@@ -1,0 +1,253 @@
+"""Pallas TPU kernel: fused recurrent-scan step for RWKV6 / rGLRU serving.
+
+Recurrent layers cache O(1) state per sequence instead of O(context) KV —
+the extreme case of the paper's C4/C6 memory story — and the serving engine
+stores that state as posit8/posit16 in the state pool.  This kernel runs the
+per-token recurrence with the posit state decoded in VMEM, accumulated in
+f32, and re-encoded in-kernel after every token (same idiom as
+`paged_flash_decode`: HBM only ever sees the narrow ints).
+
+The per-token round-trip is the serving-path quantization contract: because
+every value that crosses a token boundary is used at its round-tripped
+value, the scan is invariant to where prefill chunks split the prompt, and
+the paged engine's chunked prefill + single-token decode reproduces dense
+`generate()` bit-for-bit.
+
+Grid layout puts the time axis last as an "arbitrary" dimension and carries
+the state in VMEM scratch across it (the online-softmax accumulator
+pattern); batch (and head, for WKV) axes are "parallel".  `num_new` is
+scalar-prefetched and masks per-token updates at `t >= num_new[b]`, so
+inactive pool slots carry their state through unchanged (posit
+encode(decode(bits)) is the identity on canonical bits).
+
+The jnp `lax.scan` twins (`*_ref`) implement the identical per-token math
+and serve as the counted CPU/interpret oracle under `kernels.ops`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.convert import f32_to_posit
+from repro.core.decode import decode_to_f32
+from repro.core.types import PositConfig
+
+
+def _rt(x, cfg: PositConfig | None):
+    """Posit round-trip (quantize state to its storage format); identity
+    when no posit policy is in force."""
+    if cfg is None:
+        return x
+    return decode_to_f32(f32_to_posit(x, cfg), cfg)
+
+
+def _load_state(ref_val, cfg, posit_state):
+    if posit_state:
+        return decode_to_f32(ref_val, cfg)
+    return ref_val.astype(jnp.float32)
+
+
+def _store_state(val, cfg, posit_state):
+    if posit_state:
+        return f32_to_posit(val, cfg)
+    return val
+
+
+# --------------------------------------------------------------------------
+# WKV (RWKV6 time-mix core):
+#   y_t = r_t . S_{t-1}  +  (sum_d r_t u k_t) v_t
+#   S_t = rt( diag(exp(logw_t)) S_{t-1} + k_t^T v_t )
+# --------------------------------------------------------------------------
+def _wkv_kernel(nn_ref, r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                y_ref, sf_ref, s_scr, *, cfg_state, posit_state, T):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_scr[...] = _load_state(s0_ref[0, 0], cfg_state, posit_state)
+
+    S = s_scr[...]                                    # [dh, dh] f32
+    r = r_ref[0, 0].astype(jnp.float32)               # [1, dh]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)                # [1, dh]
+
+    y = jax.lax.dot_general(r, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    su = jnp.sum(r * u * k, axis=-1, keepdims=True)   # [1, 1] bonus
+    y = y + su * v
+
+    # outer products via contract-the-unit-axis dot_general (no transposes:
+    # Mosaic dislikes 1D relayouts); E[d, :] = exp(w[d]) scales row d of S
+    def outer(col, row):
+        return jax.lax.dot_general(col, row, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    S_new = outer(jnp.exp(w), jnp.ones_like(v)) * S + outer(k, v)
+    S_new = _rt(S_new, cfg_state)
+
+    live = t < nn_ref[b]
+    S_new = jnp.where(live, S_new, S)
+    s_scr[...] = S_new
+    y_ref[0, 0] = jnp.where(live, y, 0.0)
+
+    @pl.when(t == T - 1)
+    def _done():
+        sf_ref[0, 0] = _store_state(S_new, cfg_state, posit_state)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_state", "posit_state",
+                                             "interpret"))
+def wkv_scan_pallas(r, k, v, logw, u, s0, num_new, *,
+                    cfg_state: PositConfig | None, posit_state: bool,
+                    interpret: bool = False):
+    """r/k/v/logw [B, H, T, dh], u [H, dh], s0 [B, H, dh, dh] (posit storage
+    ints when posit_state), num_new [B] int32 -> (y [B, H, T, dh] f32,
+    s_fin same representation as s0)."""
+    B, H, T, dh = r.shape
+    grid = (B, H, T)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, t, nn: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, t, nn: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, t, nn: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, t, nn: (b, h, t, 0)),
+            pl.BlockSpec((1, dh), lambda b, h, t, nn: (h, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b, h, t, nn: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, t, nn: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b, h, t, nn: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, cfg_state=cfg_state,
+                          posit_state=posit_state, T=T),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((B, H, T, dh), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, dh, dh), s0.dtype)),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(num_new, r, k, v, logw, u, s0)
+
+
+def wkv_scan_ref(r, k, v, logw, u, s0, num_new, *,
+                 cfg_state: PositConfig | None, posit_state: bool):
+    """jnp oracle: identical per-token math as `_wkv_kernel`."""
+    S0 = (decode_to_f32(s0, cfg_state) if posit_state
+          else s0.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+    rT = jnp.moveaxis(r.astype(jnp.float32), 2, 0)    # [T, B, H, dh]
+    kT = jnp.moveaxis(k.astype(jnp.float32), 2, 0)
+    vT = jnp.moveaxis(v.astype(jnp.float32), 2, 0)
+    wT = jnp.moveaxis(logw.astype(jnp.float32), 2, 0)
+    tt = jnp.arange(r.shape[2], dtype=jnp.int32)
+
+    def body(S, inp):
+        r_t, k_t, v_t, w_t, t = inp
+        y = jnp.einsum("bhd,bhdv->bhv", r_t, S)
+        su = jnp.einsum("bhd,hd,bhd->bh", r_t, uf, k_t)
+        y = y + su[..., None] * v_t
+        S_new = jnp.exp(w_t)[..., None] * S + k_t[..., None] * v_t[:, :, None, :]
+        S_new = _rt(S_new, cfg_state)
+        live = t < num_new                            # [B]
+        S = jnp.where(live[:, None, None, None], S_new, S)
+        y = jnp.where(live[:, None, None], y, 0.0)
+        return S, y
+
+    S_fin, ys = jax.lax.scan(body, S0, (rT, kT, vT, wT, tt))
+    y = jnp.moveaxis(ys, 0, 2)
+    return y, _store_state(S_fin, cfg_state, posit_state)
+
+
+# --------------------------------------------------------------------------
+# rGLRU (Griffin/RecurrentGemma core):  h_t = rt(a_t h_{t-1} + b_t), y = h_t
+# (a/b are the batched gate projections, computed outside the scan)
+# --------------------------------------------------------------------------
+def _rglru_kernel(nn_ref, a_ref, b_ref, h0_ref, y_ref, hf_ref, h_scr, *,
+                  cfg_state, posit_state, T):
+    bb = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = _load_state(h0_ref[...], cfg_state, posit_state)
+
+    h = h_scr[...]                                    # [1, d] f32
+    a = a_ref[0].astype(jnp.float32)                  # [1, d]
+    bt = b_ref[0].astype(jnp.float32)
+    h_new = _rt(a * h + bt, cfg_state)
+
+    live = t < nn_ref[bb]
+    h_new = jnp.where(live, h_new, h)
+    h_scr[...] = h_new
+    y_ref[0] = jnp.where(live, h_new, 0.0)
+
+    @pl.when(t == T - 1)
+    def _done():
+        hf_ref[...] = _store_state(h_new, cfg_state, posit_state)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_state", "posit_state",
+                                             "interpret"))
+def rglru_scan_pallas(a, b, h0, num_new, *,
+                      cfg_state: PositConfig | None, posit_state: bool,
+                      interpret: bool = False):
+    """a/b [B, T, d], h0 [B, d] (posit storage ints when posit_state),
+    num_new [B] int32 -> (h_seq [B, T, d] f32, h_fin same rep as h0)."""
+    B, T, d = a.shape
+    grid = (B, T)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bb, t, nn: (bb, t, 0)),
+            pl.BlockSpec((1, 1, d), lambda bb, t, nn: (bb, t, 0)),
+            pl.BlockSpec((1, d), lambda bb, t, nn: (bb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, d), lambda bb, t, nn: (bb, t, 0)),
+            pl.BlockSpec((1, d), lambda bb, t, nn: (bb, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_rglru_kernel, cfg_state=cfg_state,
+                          posit_state=posit_state, T=T),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((B, T, d), jnp.float32),
+                   jax.ShapeDtypeStruct((B, d), h0.dtype)),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(num_new, a, b, h0)
+
+
+def rglru_scan_ref(a, b, h0, num_new, *,
+                   cfg_state: PositConfig | None, posit_state: bool):
+    """jnp oracle: identical per-token math as `_rglru_kernel`."""
+    H0 = (decode_to_f32(h0, cfg_state) if posit_state
+          else h0.astype(jnp.float32))
+    aT = jnp.moveaxis(a.astype(jnp.float32), 1, 0)    # [T, B, d]
+    bT = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    tt = jnp.arange(a.shape[1], dtype=jnp.int32)
+
+    def body(h, inp):
+        a_t, b_t, t = inp
+        h_new = _rt(a_t * h + b_t, cfg_state)
+        live = (t < num_new)[:, None]                 # [B, 1]
+        h = jnp.where(live, h_new, h)
+        return h, jnp.where(live, h_new, 0.0)
+
+    h_fin, ys = jax.lax.scan(body, H0, (aT, bT, tt))
+    return jnp.moveaxis(ys, 0, 1), _store_state(h_fin, cfg_state, posit_state)

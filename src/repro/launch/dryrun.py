@@ -195,22 +195,27 @@ def probe_roofline(arch, shape, mesh, multi_pod, fmt) -> dict:
 
     XLA cost_analysis counts a scanned body once; we compile UNROLLED probes
     at L=P and L=2P layers (P = block-pattern length), solve
-    outside = 2*c1 - c2, per_pattern = c2 - c1, and extrapolate to the full
-    depth:  total(L) = outside + (L/P) * per_pattern.  Exact for uniform
-    stacks; ~(rem/L) approximation for hybrid remainders (recurrentgemma).
+    outside = 2*c1 - c2, per_pattern = c2 - c1.  A hybrid remainder
+    (recurrentgemma's trailing rglru pair: n_layers % P != 0) gets its own
+    probe at L = P + rem, whose delta over c1 is exactly the remainder
+    layers' cost:  total(L) = outside + (L // P) * per_pattern + rem_cost.
+    Exact for every stack, uniform or hybrid.
     """
     cfg_full = configs.get_config(arch)
     P = len(cfg_full.block_pattern)
     c1 = _probe_counters(arch, shape, mesh, multi_pod, fmt, P)
     c2 = _probe_counters(arch, shape, mesh, multi_pod, fmt, 2 * P)
-    ratio = cfg_full.n_layers / P
+    reps, rem = divmod(cfg_full.n_layers, P)
+    c3 = (_probe_counters(arch, shape, mesh, multi_pod, fmt, P + rem)
+          if rem else None)
     out = {}
     names = ("flops_per_device", "bytes_per_device",
              "collective_bytes_per_device")
     for i, name in enumerate(names):
         outside = 2 * c1[i] - c2[i]
         per_pattern = c2[i] - c1[i]
-        out[name] = max(outside, 0.0) + ratio * per_pattern
+        rem_cost = (c3[i] - c1[i]) if c3 is not None else 0.0
+        out[name] = max(outside, 0.0) + reps * per_pattern + rem_cost
     out["probe_collectives_by_op_2p"] = c2[3]
     out["t_compute_s"] = out["flops_per_device"] / analysis.PEAK_FLOPS_BF16
     out["t_memory_s"] = out["bytes_per_device"] / analysis.HBM_BW
@@ -255,6 +260,22 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             rec.update(terms)
             rec["model_flops_analytic"] = analysis.model_flops(
                 cfg_plain, shape, shape.kind == "decode")
+            # per-layer serving-cache accounting from the backends' memory
+            # descriptors: state layers are O(1)/seq, windowed KV
+            # O(window), full KV O(context) — the exact bytes the paged
+            # engine holds per sequence at this shape's context length
+            from repro.serving.backends import layout_for
+            layout = layout_for(cfg_plain)
+            page = 64
+            rec["serving_cache"] = {
+                "page_size": page,
+                "per_layer": [
+                    {"kind": d.kind, "backend": d.backend,
+                     "bytes_per_seq": d.bytes_per_seq(shape.seq_len, page)}
+                    for d in layout.descs(page)],
+                "bytes_per_seq": layout.cache_bytes_per_seq(shape.seq_len,
+                                                            page),
+            }
             rec["t_lower_s"] = round(t_lower, 1)
             rec["t_compile_s"] = round(t_compile, 1)
             rec["status"] = "ok"

@@ -112,6 +112,12 @@ def main():
     rng = np.random.default_rng(1)
     cap = args.prompt_len + args.max_new
     width = max(2, -(-cap // args.page_size))
+    from repro.serving.backends import layout_for
+    layout = layout_for(cfg)
+    kinds = ",".join(f"{b.kind}:{b.backend}" for b in layout.backends)
+    print(f"[serve] cache backends: {kinds}; per-seq cache at "
+          f"{cap} tokens = "
+          f"{layout.cache_bytes_per_seq(cap, args.page_size) / 1e3:.1f} KB")
     eng = PagedServingEngine(
         params, cfg, max_seqs=args.batch, page_size=args.page_size,
         table_width=width, prefill_chunk=args.prefill_chunk,

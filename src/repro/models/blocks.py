@@ -99,6 +99,37 @@ def linear(x, p: Params, policy: PositPolicy | None = None):
 
 
 # --------------------------------------------------------------------------
+# stateful single-step serving helpers (recurrent blocks; serving/backends)
+# --------------------------------------------------------------------------
+def rt_values(x, pcfg):
+    """Posit round-trip decode(encode(x)) — identity when pcfg is None.
+
+    The serving-side state quantization rule: every value that crosses a
+    step boundary (carried state, token shifts, conv tails) is *used* at
+    its round-tripped value, so the computation is independent of where
+    prefill chunks split the sequence and of whether the state was stored
+    as raw floats (dense cache tuples) or posit bits (the state pool) —
+    both decode to the same values.  Round-tripping is idempotent, so
+    applying it at use as well as at store costs nothing numerically."""
+    if pcfg is None:
+        return x
+    from repro.core.convert import f32_to_posit
+    from repro.core.decode import decode_to_f32
+    return decode_to_f32(f32_to_posit(x.astype(jnp.float32), pcfg), pcfg)
+
+
+def select_last(x, num_new):
+    """x [B, S, ...] -> the last *valid* position per row: x[b, num_new[b]-1]
+    (clipped into range; rows with num_new == 0 return position 0, which the
+    caller masks).  num_new None means every row is fully valid: x[:, -1]."""
+    if num_new is None:
+        return x[:, -1]
+    idx = jnp.clip(num_new - 1, 0, x.shape[1] - 1)
+    idx = idx.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
+# --------------------------------------------------------------------------
 # rotary position embedding
 # --------------------------------------------------------------------------
 def rope(x, positions, theta: float = 10000.0):

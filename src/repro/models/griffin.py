@@ -96,3 +96,57 @@ def rglru_block(x, p: Params, *, policy: PositPolicy, state=None):
     gate = jax.nn.gelu(linear(x, p["w_gate_branch"], policy))
     out = linear(rec * gate, p["w_out"], policy)
     return out, (h_last, new_conv)
+
+
+def rglru_block_serving(x, p: Params, *, policy: PositPolicy, state,
+                        num_new=None):
+    """Stateful serving-path recurrent block: same projections/gates as
+    rglru_block, but the diagonal recurrence runs through the kernels.ops
+    recurrent-scan dispatch (Pallas fused kernel on TPU, counted jnp oracle
+    elsewhere) with the hidden state posit-round-tripped after every token
+    under policy.kv_cache.
+
+    state = (h0 [B,d], conv_state [B,K-1,d]): f32 arrays (dense cache
+    tuples) or PositArray pool slots (the paged engine's state pool) — h0
+    is returned in the same representation; the conv tail comes back as raw
+    f32 values of the last K-1 valid inputs (callers re-encode for the pool
+    via backends.store_state).  num_new [B] masks ragged chunks; every
+    cross-token value is used round-tripped (blocks.rt_values), so the scan
+    is invariant to prefill chunking.
+    """
+    from repro.kernels import ops as kops
+    from repro.models.blocks import rt_values
+    from repro.serving.backends import state_f32
+    h0, conv_state = state
+    pcfg = policy.kv_cache
+    S = x.shape[1]
+    K = p["conv_w"].shape[0]
+    branch = linear(x, p["w_x"], policy)
+    xp = rt_values(jnp.concatenate(
+        [state_f32(conv_state).astype(branch.dtype), branch],
+        axis=1), pcfg).astype(branch.dtype)
+    conv = sum(xp[:, i:i + S] * p["conv_w"][i] for i in range(K)) + p["conv_b"]
+    conv = conv.astype(x.dtype)
+
+    # gates read the conv output (rglru_block's rglru(branch, branch)); a/b
+    # are batched projections — only the h recurrence itself is sequential
+    r = jax.nn.sigmoid(linear(conv, p["w_rec_gate"], policy))
+    i = jax.nn.sigmoid(linear(conv, p["w_input_gate"], policy))
+    log_a = LRU_C * r.astype(jnp.float32) * jax.nn.log_sigmoid(p["lam"])
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * conv).astype(jnp.float32)
+
+    h_seq, h_fin = kops.rglru_scan(a, b, h0, num_new=num_new, cfg_state=pcfg)
+    rec = h_seq.astype(x.dtype)
+    gate = jax.nn.gelu(linear(x, p["w_gate_branch"], policy))
+    out = linear(rec * gate, p["w_out"], policy)
+
+    if num_new is None:
+        new_conv = xp[:, -(K - 1):]
+    else:
+        # row b's last K-1 valid conv inputs sit at xp[b, nn : nn+K-1]
+        # (valid branch tokens occupy xp[b, K-1 : K-1+nn])
+        idx = num_new[:, None] + jnp.arange(K - 1)[None, :]
+        new_conv = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+    return out, (h_fin, new_conv.astype(jnp.float32))

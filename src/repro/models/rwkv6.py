@@ -143,6 +143,61 @@ def rwkv6_time_mix(x, p: Params, *, head_dim: int, policy: PositPolicy,
     return out, new_state
 
 
+def rwkv6_time_mix_serving(x, p: Params, *, head_dim: int,
+                           policy: PositPolicy, state, num_new=None):
+    """Stateful serving-path time mix: same projections as rwkv6_time_mix,
+    but the WKV core runs through the kernels.ops recurrent-scan dispatch
+    (Pallas fused kernel on TPU, counted jnp oracle elsewhere) with the
+    state posit-round-tripped after every token under policy.kv_cache.
+
+    state = (S0 [B,H,dh,dh], last_x [B,d]): f32 arrays (the dense engine's
+    cache tuples) or PositArray pool slots (the paged engine's state pool) —
+    S0 is returned in the same representation; last_x comes back as raw f32
+    *values* of this chunk's last valid token (callers re-encode for the
+    pool via backends.store_state).  num_new [B] masks ragged chunks; every
+    cross-token value is used round-tripped (blocks.rt_values), so chunked
+    prefill + single-token decode reproduce the whole-sequence scan
+    bit-for-bit at any chunking.
+    """
+    from repro.kernels import ops as kops
+    from repro.models.blocks import rt_values, select_last
+    from repro.serving.backends import state_f32
+    B, S, d = x.shape
+    H = d // head_dim
+    pcfg = policy.kv_cache
+    S0, last_x = state
+    x_prev = rt_values(
+        jnp.concatenate([state_f32(last_x)[:, None].astype(x.dtype),
+                         x[:, :-1]], axis=1), pcfg).astype(x.dtype)
+
+    mix = p["mix"]
+    xr, xk, xv, xw, xg = (x + (x_prev - x) * mix[i] for i in range(5))
+
+    r = linear(xr, p["wr"], policy).reshape(B, S, H, head_dim).transpose(0, 2, 1, 3)
+    k = linear(xk, p["wk"], policy).reshape(B, S, H, head_dim).transpose(0, 2, 1, 3)
+    v = linear(xv, p["wv"], policy).reshape(B, S, H, head_dim).transpose(0, 2, 1, 3)
+    g = linear(xg, p["wg"], policy)
+
+    ww = p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    logw = -jnp.exp(jnp.clip(ww, -20.0, 10.0).astype(jnp.float32))
+    logw = logw.reshape(B, S, H, head_dim).transpose(0, 2, 1, 3)
+
+    y, S_fin = kops.wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), logw, p["u"], S0,
+                             num_new=num_new, cfg_state=pcfg)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d).astype(x.dtype)
+
+    y = y.reshape(B, S, H, head_dim)
+    mu = y.mean(axis=-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, d)
+    y = y * p["ln_x"]["scale"]
+    y = y * jax.nn.silu(g)
+    out = linear(y, p["wo"], policy)
+    new_last = select_last(x, num_new).astype(jnp.float32)
+    return out, (S_fin, new_last)
+
+
 def init_rwkv6_channel_mix(key, d_model: int, d_ff: int) -> Params:
     ks = jax.random.split(key, 3)
     return {
@@ -164,3 +219,23 @@ def rwkv6_channel_mix(x, p: Params, *, policy: PositPolicy, last_x=None):
     k = jnp.square(jax.nn.relu(linear(xk, p["wk"], policy)))
     return jax.nn.sigmoid(linear(xr, p["wr"], policy)) * linear(
         k, p["wv"], policy), x[:, -1]
+
+
+def rwkv6_channel_mix_serving(x, p: Params, *, policy: PositPolicy, last_x,
+                              num_new=None):
+    """Stateful serving-path channel mix (chunk-invariant token shift; no
+    recurrence, so no kernel dispatch).  last_x: f32 or PositArray pool
+    slot; the new shift comes back as raw f32 values (see
+    rwkv6_time_mix_serving for the state contract)."""
+    from repro.models.blocks import rt_values, select_last
+    from repro.serving.backends import state_f32
+    pcfg = policy.kv_cache
+    x_prev = rt_values(
+        jnp.concatenate([state_f32(last_x)[:, None].astype(x.dtype),
+                         x[:, :-1]], axis=1), pcfg).astype(x.dtype)
+    xk = x + (x_prev - x) * p["mix"][0]
+    xr = x + (x_prev - x) * p["mix"][1]
+    k = jnp.square(jax.nn.relu(linear(xk, p["wk"], policy)))
+    out = jax.nn.sigmoid(linear(xr, p["wr"], policy)) * linear(
+        k, p["wv"], policy)
+    return out, select_last(x, num_new).astype(jnp.float32)

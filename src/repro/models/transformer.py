@@ -178,17 +178,67 @@ def _apply_block(x, p: Params, kind: str, cfg: ModelConfig, positions,
                             policy=pol)
         return x + h.astype(x.dtype), new_cache, aux
     if kind == "rwkv6":
-        tstate, cstate = (cache if cache is not None else (None, None))
-        h, new_t = RW.rwkv6_time_mix(_norm(x, p["ln1"], cfg), p["tmix"],
-                                     head_dim=cfg.rwkv_head_dim, policy=pol,
-                                     state=tstate)
+        if cache is None:                        # training / no-cache path
+            h, new_t = RW.rwkv6_time_mix(_norm(x, p["ln1"], cfg), p["tmix"],
+                                         head_dim=cfg.rwkv_head_dim,
+                                         policy=pol, state=None)
+            x = x + h.astype(x.dtype)
+            h, new_c = RW.rwkv6_channel_mix(_norm(x, p["ln2"], cfg),
+                                            p["cmix"], policy=pol,
+                                            last_x=None)
+            return x + h.astype(x.dtype), (new_t, new_c), aux
+        # serving: dense cache tuples or a posit state-pool dict — both run
+        # the stateful chunk-invariant path (serving/backends.py)
+        from repro.serving import backends as SB
+        if isinstance(cache, dict):
+            sl, nn = cache["seq_lens"], cache["num_new"]
+            S0 = SB.zero_fresh(cache["wkv"], sl)
+            tsh = SB.zero_fresh(cache["tshift"], sl)
+            csh = SB.zero_fresh(cache["cshift"], sl)
+        else:
+            (S0, tsh), csh = cache
+            nn = None
+        h, (S_fin, t_last) = RW.rwkv6_time_mix_serving(
+            _norm(x, p["ln1"], cfg), p["tmix"], head_dim=cfg.rwkv_head_dim,
+            policy=pol, state=(S0, tsh), num_new=nn)
         x = x + h.astype(x.dtype)
-        h, new_c = RW.rwkv6_channel_mix(_norm(x, p["ln2"], cfg), p["cmix"],
-                                        policy=pol, last_x=cstate)
-        return x + h.astype(x.dtype), (new_t, new_c), aux
+        h, c_last = RW.rwkv6_channel_mix_serving(
+            _norm(x, p["ln2"], cfg), p["cmix"], policy=pol, last_x=csh,
+            num_new=nn)
+        x = x + h.astype(x.dtype)
+        if isinstance(cache, dict):
+            new_cache = {"wkv": S_fin,
+                         "tshift": SB.store_state(cache["tshift"], t_last,
+                                                  nn),
+                         "cshift": SB.store_state(cache["cshift"], c_last,
+                                                  nn),
+                         "seq_lens": sl, "num_new": nn}
+        else:
+            new_cache = ((S_fin, t_last), c_last)
+        return x, new_cache, aux
     if kind == "rglru":
-        h, new_state = GR.rglru_block(_norm(x, p["ln1"], cfg), p["rec"],
-                                      policy=pol, state=cache)
+        if cache is None:                        # training / no-cache path
+            h, new_state = GR.rglru_block(_norm(x, p["ln1"], cfg), p["rec"],
+                                          policy=pol, state=None)
+        else:
+            from repro.serving import backends as SB
+            if isinstance(cache, dict):
+                sl, nn = cache["seq_lens"], cache["num_new"]
+                h0 = SB.zero_fresh(cache["h"], sl)
+                cv = SB.zero_fresh(cache["conv"], sl)
+            else:
+                h0, cv = cache
+                nn = None
+            h, (h_fin, conv_last) = GR.rglru_block_serving(
+                _norm(x, p["ln1"], cfg), p["rec"], policy=pol,
+                state=(h0, cv), num_new=nn)
+            if isinstance(cache, dict):
+                new_state = {"h": h_fin,
+                             "conv": SB.store_state(cache["conv"], conv_last,
+                                                    nn),
+                             "seq_lens": sl, "num_new": nn}
+            else:
+                new_state = (h_fin, conv_last)
         x = x + h.astype(x.dtype)
         if cfg.moe:
             h, a = MOE.moe_block(_norm(x, p["ln2"], cfg), p["moe"],
@@ -247,40 +297,48 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
     return {"scanned": scanned, "rem": rem}
 
 
-# ---- paged caches (continuous-batching serving; serving/paged_kv.py) ------
+# ---- paged caches (continuous-batching serving; serving/backends.py) ------
 def init_paged_pages(cfg: ModelConfig, num_pages: int, page_size: int,
-                     dtype=jnp.float32):
-    """Per-layer page pools in the same {scanned, rem} structure as
-    init_caches.  Attention-only patterns: recurrent state (rwkv/rglru) has
-    no paged analogue — the dense engine serves those."""
-    from repro.serving.paged_kv import init_layer_pages
-    for kind in cfg.block_pattern:
-        if kind not in ("attn", "attn_local"):
-            raise ValueError(f"paged serving supports attention-only "
-                             f"patterns, got {kind!r}")
+                     dtype=jnp.float32, max_seqs: int = 0):
+    """Per-layer serving pools in the same {scanned, rem} structure as
+    init_caches.  Each pattern position gets its backend's pool: paged posit
+    KV for attn/attn_local, a fixed-size posit state pool (sized max_seqs)
+    for rwkv6/rglru — hybrid patterns mix both side by side."""
+    from repro.serving.backends import backend_for
     reps = cfg.pattern_reps
 
+    def one(kind):
+        return backend_for(kind, cfg).init_layer(cfg, num_pages, page_size,
+                                                 max_seqs, dtype)
+
     def stack(kind):
-        one = init_layer_pages(num_pages, cfg.n_kv, page_size, cfg.hd,
-                               cfg.policy.kv_cache, dtype)
         return jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one)
+            lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one(kind))
 
     scanned = tuple(stack(k) for k in cfg.block_pattern) if reps else ()
-    rem = tuple(init_layer_pages(num_pages, cfg.n_kv, page_size, cfg.hd,
-                                 cfg.policy.kv_cache, dtype)
-                for i in range(cfg.pattern_rem))
+    rem = tuple(one(cfg.block_pattern[i]) for i in range(cfg.pattern_rem))
     return {"scanned": scanned, "rem": rem}
 
 
 def assemble_paged_caches(pages, page_table, seq_lens, num_new):
-    """Pages tree + this step's scheduler inputs -> forward()-ready caches.
+    """Pools tree + this step's scheduler inputs -> forward()-ready caches.
 
     The scheduler fields are identical for every layer; scanned groups get
-    them broadcast over the stacked reps axis so lax.scan can slice them."""
+    them broadcast over the stacked reps axis so lax.scan can slice them.
+    KV pools additionally take the page table; state pools are slot-indexed
+    and just carry seq_lens/num_new."""
     from repro.serving.paged_kv import assemble_layer_cache
 
     def one(p, stacked: bool):
+        if "k_pages" not in p:                    # state-pool layer
+            if stacked:
+                reps = next(iter(p.values())).shape[0]
+                return {**p,
+                        "seq_lens": jnp.broadcast_to(
+                            seq_lens, (reps,) + seq_lens.shape),
+                        "num_new": jnp.broadcast_to(
+                            num_new, (reps,) + num_new.shape)}
+            return {**p, "seq_lens": seq_lens, "num_new": num_new}
         if stacked:
             reps = p["k_pages"].shape[0]
             return assemble_layer_cache(
@@ -295,24 +353,34 @@ def assemble_paged_caches(pages, page_table, seq_lens, num_new):
 
 
 def copy_paged_pages(pages, src, dst):
-    """Copy page `src` onto page `dst` in every layer's pools (the device
+    """Copy page `src` onto page `dst` in every KV layer's pools (the device
     half of the prefix cache's copy-on-write: the host rewrites one table
     entry, this duplicates the page contents it pointed at).  src/dst are
-    (traced) scalars — shard-local ids when the pools are shard_mapped."""
+    (traced) scalars — shard-local ids when the pools are shard_mapped.
+    State-pool layers have no pages and pass through untouched (the prefix
+    cache is KV-only)."""
     from repro.serving.paged_kv import copy_layer_pages
     return {"scanned": tuple(copy_layer_pages(p, src, dst, stacked=True)
+                             if "k_pages" in p else p
                              for p in pages["scanned"]),
             "rem": tuple(copy_layer_pages(p, src, dst)
+                         if "k_pages" in p else p
                          for p in pages["rem"])}
 
 
 def extract_paged_pages(caches):
     """Inverse of assemble_paged_caches: keep only the device-resident
-    page pools (the scheduler recomputes the rest every step)."""
+    pools (the scheduler recomputes the rest every step)."""
     from repro.serving.paged_kv import extract_layer_pages
-    return {"scanned": tuple(extract_layer_pages(c)
-                             for c in caches["scanned"]),
-            "rem": tuple(extract_layer_pages(c) for c in caches["rem"])}
+
+    def one(c):
+        if "k_pages" in c:
+            return extract_layer_pages(c)
+        return {k: v for k, v in c.items()
+                if k not in ("seq_lens", "num_new")}
+
+    return {"scanned": tuple(one(c) for c in caches["scanned"]),
+            "rem": tuple(one(c) for c in caches["rem"])}
 
 
 # --------------------------------------------------------------------------

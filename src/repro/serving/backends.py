@@ -1,0 +1,265 @@
+"""Pluggable per-layer sequence-cache backends for the serving engine.
+
+What a layer caches per sequence used to be a hardwired attention-KV
+assumption; this module makes it a per-layer-kind backend choice:
+
+  * `PagedKVBackend`   — the existing block-paged posit KV pool
+                         (attn / attn_local layers; serving/paged_kv.py).
+  * `StatePoolBackend` — a fixed-size posit state pool: one quantized state
+                         slot per serving slot.  RWKV6 caches the wkv
+                         channel-state matrix plus the time/channel-mix
+                         token shifts; rGLRU caches the recurrent hidden
+                         vector plus the causal-conv tail.  O(1) bytes per
+                         sequence vs the KV pool's O(context) — no page
+                         tables, no allocation pressure, trivial continuous
+                         batching.
+  * `HybridLayout`     — the per-config composition: Griffin/RecurrentGemma
+                         patterns mix windowed KV pages and state slots
+                         side by side; pure-attention and pure-recurrent
+                         stacks are the degenerate cases.
+
+Pool state leaves are `PositArray` under a posit KV policy (`cfg.policy
+.kv_cache`) and f32 otherwise.  Assembled state caches carry the step's
+`seq_lens`/`num_new` scheduler fields exactly like assembled KV caches, so
+`transformer._cache_length` and the engine's step plumbing are uniform.
+
+Lifecycle notes:
+  * alloc/free is implicit — a state slot belongs to whichever request owns
+    the serving slot; `zero_fresh` re-initializes it on the first prefill
+    chunk (seq_lens == 0), so freeing is just dropping the slot.
+  * preempt-snapshot/resume for state layers is resume-via-re-prefill: the
+    engine already requeues a preempted request with its prompt + generated
+    tokens, and re-prefilling regenerates the state bit-exactly (the
+    per-token posit round-trip makes the scan chunk-invariant).
+  * the prefix cache is KV-only by design and the engine disables it for
+    patterns with state layers: a recurrent layer must see every token, so
+    skipping cached prefix tokens would skip state updates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.array import PositArray
+
+# ndim of each unstacked state-pool leaf ([max_seqs, ...]); the slot axis of
+# a (possibly rep-stacked) leaf sits at `leaf.ndim - base` (0 unstacked, 1
+# scan-stacked) — sharding.paged_pool_pspecs uses this to put the data axis
+# on the slot dim
+_STATE_BASE_NDIM = {"wkv": 4, "tshift": 2, "cshift": 2, "h": 2, "conv": 3}
+
+
+# --------------------------------------------------------------------------
+# state representation helpers (shared by models/* serving paths)
+# --------------------------------------------------------------------------
+def state_f32(s):
+    """Decoded f32 view of a carried state leaf (PositArray or float)."""
+    if isinstance(s, PositArray):
+        from repro.core.decode import decode_to_f32
+        return decode_to_f32(s.bits, s.cfg)
+    return jnp.asarray(s, jnp.float32)
+
+
+def zero_fresh(buf, seq_lens):
+    """Zero the slots that start a fresh sequence this step (seq_lens == 0:
+    first prefill chunk, or a re-admitted slot after preemption/retirement).
+    Posit zero is the all-zeros bit pattern, so zeroing bits == encoding
+    0.0; stale slots keep their state untouched."""
+    live = (seq_lens > 0).reshape((-1,) + (1,) * (buf.ndim - 1))
+    if isinstance(buf, PositArray):
+        return PositArray(jnp.where(live, buf.bits, 0), buf.cfg)
+    return jnp.where(live, buf, jnp.zeros((), buf.dtype))
+
+
+def store_state(old, new_f32, num_new):
+    """Write `new_f32` back into the pool representation of `old`, only for
+    slots that advanced this step (num_new > 0) — inactive slots keep their
+    bits exactly (no decode/encode round-trip drift on idle state)."""
+    if num_new is None:
+        live = None
+    else:
+        live = (num_new > 0).reshape((-1,) + (1,) * (old.ndim - 1))
+    if isinstance(old, PositArray):
+        from repro.core.convert import f32_to_posit
+        bits = f32_to_posit(new_f32, old.cfg)
+        if live is not None:
+            bits = jnp.where(live, bits, old.bits)
+        return PositArray(bits, old.cfg)
+    new = new_f32.astype(old.dtype)
+    return new if live is None else jnp.where(live, new, old)
+
+
+def _state_zeros(shape, pcfg, dtype):
+    if pcfg is not None:
+        return PositArray(
+            jnp.zeros(shape, jnp.dtype(pcfg.storage_dtype_name)), pcfg)
+    return jnp.zeros(shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# memory descriptors
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LayerCacheDesc:
+    """What one layer costs per sequence — the exact per-layer accounting
+    used by launch/dryrun.py and the serving benchmarks."""
+    kind: str                  # block kind: attn / attn_local / rwkv6 / rglru
+    backend: str               # "paged_kv" | "state_pool"
+    bytes_per_token: int       # KV bytes per cached token (0 for state)
+    state_bytes_per_seq: int   # fixed per-seq state bytes (0 for KV)
+    window: int | None         # attn_local sliding window, if any
+
+    def bytes_per_seq(self, context: int, page_size: int) -> int:
+        """Cache bytes one sequence holds at `context` tokens.  Windowed KV
+        counts only live pages (sliding-window reclamation frees expired
+        ones): a window of W tokens spans at most ceil(W/page)+1 pages."""
+        if self.backend == "state_pool":
+            return self.state_bytes_per_seq
+        live = context
+        if self.window is not None:
+            live = min(context, self.window + page_size)
+        n_pages = -(-live // page_size) if live else 0
+        return n_pages * page_size * self.bytes_per_token
+
+
+def _elem_bytes(cfg, dtype) -> int:
+    pcfg = cfg.policy.kv_cache
+    if pcfg is not None:
+        return pcfg.storage_bits // 8
+    return jnp.dtype(dtype).itemsize
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+class PagedKVBackend:
+    """The block-paged posit KV pool (serving/paged_kv.py) behind the
+    backend protocol."""
+    backend = "paged_kv"
+    needs_pages = True
+    supports_prefix_cache = True
+
+    def __init__(self, kind: str):
+        self.kind = kind
+
+    def init_layer(self, cfg, num_pages, page_size, max_seqs, dtype):
+        from repro.serving.paged_kv import init_layer_pages
+        return init_layer_pages(num_pages, cfg.n_kv, page_size, cfg.hd,
+                                cfg.policy.kv_cache, dtype)
+
+    def assemble(self, pool, page_table, seq_lens, num_new):
+        from repro.serving.paged_kv import assemble_layer_cache
+        return assemble_layer_cache(pool, page_table, seq_lens, num_new)
+
+    def extract(self, cache):
+        from repro.serving.paged_kv import extract_layer_pages
+        return extract_layer_pages(cache)
+
+    def copy_page(self, pool, src, dst, stacked=False):
+        from repro.serving.paged_kv import copy_layer_pages
+        return copy_layer_pages(pool, src, dst, stacked=stacked)
+
+    def desc(self, cfg, page_size, dtype=jnp.float32) -> LayerCacheDesc:
+        w = _elem_bytes(cfg, dtype)
+        return LayerCacheDesc(
+            kind=self.kind, backend=self.backend,
+            bytes_per_token=2 * cfg.n_kv * cfg.hd * w,
+            state_bytes_per_seq=0,
+            window=cfg.window if self.kind == "attn_local" else None)
+
+
+class StatePoolBackend:
+    """Fixed-size per-slot recurrent state, posit-quantized when the KV
+    policy is set.  No pages, no growth: `init_layer` sizes the pool at
+    max_seqs and the engine's slot index doubles as the state index."""
+    backend = "state_pool"
+    needs_pages = False
+    supports_prefix_cache = False
+
+    def __init__(self, kind: str):
+        if kind not in ("rwkv6", "rglru"):
+            raise ValueError(f"no state-pool layout for block kind {kind!r}")
+        self.kind = kind
+
+    def _shapes(self, cfg, max_seqs):
+        d = cfg.d_model
+        if self.kind == "rwkv6":
+            dh = cfg.rwkv_head_dim
+            H = d // dh
+            return {"wkv": (max_seqs, H, dh, dh), "tshift": (max_seqs, d),
+                    "cshift": (max_seqs, d)}
+        from repro.models.griffin import CONV_WIDTH
+        return {"h": (max_seqs, d), "conv": (max_seqs, CONV_WIDTH - 1, d)}
+
+    def init_layer(self, cfg, num_pages, page_size, max_seqs, dtype):
+        if max_seqs < 1:
+            raise ValueError(
+                f"state-pool layer ({self.kind}) needs max_seqs >= 1")
+        pcfg = cfg.policy.kv_cache
+        return {k: _state_zeros(shape, pcfg, dtype)
+                for k, shape in self._shapes(cfg, max_seqs).items()}
+
+    def assemble(self, pool, page_table, seq_lens, num_new):
+        # page_table is ignored: state is slot-indexed, not paged
+        return {**pool, "seq_lens": seq_lens, "num_new": num_new}
+
+    def extract(self, cache):
+        return {k: v for k, v in cache.items()
+                if k not in ("seq_lens", "num_new")}
+
+    def copy_page(self, pool, src, dst, stacked=False):
+        # prefix-cache COW is KV-only; state pools have no pages to copy
+        return pool
+
+    def desc(self, cfg, page_size, dtype=jnp.float32) -> LayerCacheDesc:
+        w = _elem_bytes(cfg, dtype)
+        elems = sum(int(jnp.prod(jnp.asarray(shape[1:])))
+                    for shape in self._shapes(cfg, 1).values())
+        return LayerCacheDesc(kind=self.kind, backend=self.backend,
+                              bytes_per_token=0,
+                              state_bytes_per_seq=elems * w, window=None)
+
+
+def backend_for(kind: str, cfg) -> PagedKVBackend | StatePoolBackend:
+    if kind in ("attn", "attn_local"):
+        return PagedKVBackend(kind)
+    return StatePoolBackend(kind)
+
+
+class HybridLayout:
+    """Per-pattern-position backend composition for one model config."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.backends = tuple(backend_for(k, cfg)
+                              for k in cfg.block_pattern)
+
+    @property
+    def needs_pages(self) -> bool:
+        return any(b.needs_pages for b in self.backends)
+
+    @property
+    def has_state(self) -> bool:
+        return any(not b.needs_pages for b in self.backends)
+
+    @property
+    def supports_prefix_cache(self) -> bool:
+        return all(b.supports_prefix_cache for b in self.backends)
+
+    def descs(self, page_size, dtype=jnp.float32) -> list[LayerCacheDesc]:
+        """One descriptor per physical layer, remainder included (the
+        pattern cycles: layer i uses block_pattern[i % P])."""
+        P = len(self.cfg.block_pattern)
+        return [self.backends[i % P].desc(self.cfg, page_size, dtype)
+                for i in range(self.cfg.n_layers)]
+
+    def cache_bytes_per_seq(self, context: int, page_size: int,
+                            dtype=jnp.float32) -> int:
+        return sum(d.bytes_per_seq(context, page_size)
+                   for d in self.descs(page_size, dtype))
+
+
+def layout_for(cfg) -> HybridLayout:
+    return HybridLayout(cfg)

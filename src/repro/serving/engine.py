@@ -48,7 +48,9 @@ import jax.numpy as jnp
 from repro.models.transformer import (ModelConfig, assemble_paged_caches,
                                       copy_paged_pages, extract_paged_pages,
                                       forward, init_caches, init_paged_pages)
-from repro.serving.paged_kv import GATHER_FALLBACKS, PagePool
+from repro.serving.backends import layout_for
+from repro.serving.paged_kv import (GATHER_FALLBACKS, PagePool,
+                                    reclaimable_pages)
 from repro.serving.prefix_cache import RadixIndex
 
 # python-body executions of the traced step fns — i.e. trace counts.  Tests
@@ -314,9 +316,23 @@ class _Slot:
 
 
 class PagedServingEngine:
-    """Continuous-batching serving over a paged (optionally posit) KV pool.
+    """Continuous-batching serving over pluggable per-layer sequence caches.
 
-    params/cfg as for generate(); attention-only block patterns.
+    params/cfg as for generate().  Each layer kind maps to a
+    serving/backends.py cache backend: attention layers live in the paged
+    (optionally posit) KV pool; recurrent layers (rwkv6/rglru) live in a
+    fixed-size posit *state pool* — one quantized state slot per sequence
+    slot, O(1) in context length.  Hybrid patterns (recurrentgemma) mix
+    both.  The host scheduler below is backend-agnostic: slots/admission/
+    preemption are identical, paging simply no-ops for state layers (a
+    state slot is owned by whichever request holds the sequence slot and is
+    zeroed on first prefill chunk, so preempt/resume is resume-via-
+    re-prefill with no extra bookkeeping).  The prefix cache is KV-only and
+    auto-disables for patterns with recurrent layers — a state slot is not
+    content-addressable by token prefix the way an immutable KV page is.
+    For all-attn_local patterns (no prefix cache), fully expired
+    sliding-window pages are freed eagerly after every step, so a long
+    windowed decode holds O(window) pages, not O(context).
 
     max_seqs:     sequence slots (the fused step's batch dimension)
     page_size:    tokens per KV page
@@ -366,6 +382,9 @@ class PagedServingEngine:
         self.params, self.cfg = params, cfg
         self.max_seqs, self.page = max_seqs, page_size
         self.width = table_width
+        self.layout = layout_for(cfg)
+        self._needs_pages = self.layout.needs_pages
+        self._recurrent = self.layout.has_state
         # chunk boundaries align to page_size multiples: warm prefill
         # resumes at a cached-page boundary, so a chunk that straddled a
         # page would re-prefill part of a cached page (or leave one
@@ -381,6 +400,15 @@ class PagedServingEngine:
             if max_seqs % ndata != 0:
                 raise ValueError(f"max_seqs={max_seqs} must divide over the "
                                  f"data axis ({ndata})")
+            if self._recurrent and ntp > 1:
+                # sharding.py lays state pools out head-sharded on the
+                # model axis, but the serving step's TP contexts only wrap
+                # the attention/MLP projections — recurrent serving shards
+                # data-parallel only (strategy_for makes the same call for
+                # training).  Reject rather than silently mis-shard.
+                raise ValueError(
+                    "recurrent/hybrid patterns serve data-parallel only; "
+                    f"use a mesh with model axis 1 (got {ntp})")
             dims = [(cfg.n_heads, "n_heads"), (cfg.n_kv, "n_kv")]
             if cfg.moe is None:
                 dims.append((cfg.d_ff, "d_ff"))
@@ -398,15 +426,22 @@ class PagedServingEngine:
             self.n_shards = 1
         self.slots_per_shard = max_seqs // self.n_shards
         if num_pages is None:
-            num_pages = self.n_shards * (self.slots_per_shard * table_width
-                                         + 1)
+            if self._needs_pages:
+                num_pages = self.n_shards * (self.slots_per_shard
+                                             * table_width + 1)
+            else:
+                # pure-recurrent: no KV layer reads the pool; keep the
+                # garbage page plus one allocatable page per shard so the
+                # page bookkeeping stays well-formed at negligible cost
+                num_pages = 2 * self.n_shards
         if num_pages % self.n_shards != 0:
             raise ValueError(f"num_pages={num_pages} must divide over the "
                              f"data axis ({self.n_shards})")
         self.num_pages = num_pages
         self.pages_per_shard = num_pages // self.n_shards
         self.pages = init_paged_pages(cfg, num_pages, page_size,
-                                      dtype=jnp.dtype(cfg.dtype))
+                                      dtype=jnp.dtype(cfg.dtype),
+                                      max_seqs=max_seqs)
         if mesh is not None:
             from repro.distributed.sharding import (paged_pool_pspecs,
                                                     serving_param_pspecs,
@@ -431,6 +466,11 @@ class PagedServingEngine:
         # shard-local is what keeps DP bit-parity with one device
         self._prefix = None
         self._copy_fn = None
+        if prefix_cache and not self.layout.supports_prefix_cache:
+            # state slots are mutable accumulators, not content-addressed
+            # immutable pages — prefix caching cleanly no-ops for any
+            # pattern with recurrent layers
+            prefix_cache = False
         if prefix_cache:
             key = (f"{cfg.name}|kv={cfg.policy.kv_cache}|page={page_size}"
                    f"|n_kv={cfg.n_kv}|hd={cfg.hd}")
@@ -449,7 +489,18 @@ class PagedServingEngine:
         self._step_idx = 0
         self.finished: dict[int, np.ndarray] = {}
         self.counters = collections.Counter()
-        self._gather_base = self._moe_base = 0
+        self._gather_base = self._moe_base = self._rec_base = 0
+        # eager sliding-window page reclamation: sound only when *every*
+        # attention layer is windowed (a full-attn layer still reads old
+        # pages) and the prefix cache is off (a cached page must stay
+        # resident for future prefix hits, not be recycled)
+        attn_kinds = [k for k in cfg.block_pattern
+                      if k in ("attn", "attn_local")]
+        self._reclaim_window = (
+            cfg.window
+            if (attn_kinds and all(k == "attn_local" for k in attn_kinds)
+                and cfg.window and self._prefix is None)
+            else None)
         self.reset_stats()
 
         greedy = temperature <= 0.0
@@ -512,6 +563,8 @@ class PagedServingEngine:
         shard's sub-pool (evicting idle cached pages, then preempting
         within the shard, if it runs dry)."""
         slot = self.slots[i]
+        if not self._needs_pages:
+            return                   # state-pool-only layout: no KV pages
         need = -(-upto // self.page)
         if need > self.width:
             raise ValueError(f"request {slot.req.rid}: {upto} tokens exceed "
@@ -525,7 +578,8 @@ class PagedServingEngine:
         slot = self.slots[i]
         pool = self._pools[self._shard(i)]
         for pg in slot.pages:
-            pool.decref(pg)          # cached prefix pages stay resident
+            if pg:                   # 0 = reclaimed-window placeholder
+                pool.decref(pg)      # cached prefix pages stay resident
         self.table[i, :] = 0
         self.seq_lens[i] = 0
         self.slots[i] = None
@@ -683,7 +737,7 @@ class PagedServingEngine:
                 n_match = hit // self.page
                 need = -(-(len(req.prompt) + 1) // self.page) - n_match
                 avail = pool.n_free + max(0, pool.n_evictable - n_match)
-                if need > avail:
+                if self._needs_pages and need > avail:
                     continue
                 cached = min(hit, len(req.prompt) - 1)
                 if best is None or (cached, -i) > best[0]:
@@ -701,6 +755,11 @@ class PagedServingEngine:
                                   pages=[])
             self._admitted += 1
             self.counters["admitted"] += 1
+            if self._recurrent:
+                # the sequence slot *is* the state-pool slot; its state
+                # leaves are zeroed device-side on the first prefill chunk
+                # (seq_lens == 0 -> backends.zero_fresh)
+                self.counters["state_slot_allocs"] += 1
             self._attach_prefix(i)
 
     # ---- public API ------------------------------------------------------
@@ -712,7 +771,9 @@ class PagedServingEngine:
             raise ValueError("prompt must contain at least one token")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
-        if len(prompt) + max_new > self.width * self.page:
+        if self._needs_pages and len(prompt) + max_new > self.width * self.page:
+            # page-table capacity only binds layouts with KV layers; pure
+            # state-pool sequences are O(1) in length
             raise ValueError(f"prompt+max_new = {len(prompt) + max_new} "
                              f"exceeds per-sequence capacity "
                              f"{self.width * self.page}")
@@ -744,18 +805,22 @@ class PagedServingEngine:
         """Scheduler + prefix-cache counters (the serving bench prints
         this).  Fallback counters are process-global; they are reported as
         deltas since engine construction or the last reset_stats()."""
+        from repro.kernels.ops import RECURRENT_FALLBACKS
         from repro.models.moe import DENSE_MOE_FALLBACKS
         d = {k: 0 for k in ("admitted", "finished", "preempted",
                             "prefill_steps", "decode_steps",
                             "prefix_hits", "prefix_misses",
                             "prefix_hit_tokens", "prefix_probe_tokens",
                             "evicted_pages", "cow_copies",
-                            "deduped_pages")}
+                            "deduped_pages", "state_slot_allocs",
+                            "expired_page_frees")}
         d.update(self.counters)
         d["gather_fallbacks"] = (sum(GATHER_FALLBACKS.values())
                                  - self._gather_base)
         d["dense_moe_fallbacks"] = (sum(DENSE_MOE_FALLBACKS.values())
                                     - self._moe_base)
+        d["recurrent_fallbacks"] = (sum(RECURRENT_FALLBACKS.values())
+                                    - self._rec_base)
         d["free_pages"] = sum(p.n_free for p in self._pools)
         d["cached_pages"] = self.cached_pages
         return d
@@ -763,10 +828,12 @@ class PagedServingEngine:
     def reset_stats(self):
         """Zero the counters and re-baseline the global fallback counters
         (the tests' reset hook; several drains can share one engine)."""
+        from repro.kernels.ops import RECURRENT_FALLBACKS
         from repro.models.moe import DENSE_MOE_FALLBACKS
         self.counters.clear()
         self._gather_base = sum(GATHER_FALLBACKS.values())
         self._moe_base = sum(DENSE_MOE_FALLBACKS.values())
+        self._rec_base = sum(RECURRENT_FALLBACKS.values())
 
     def _sample_host(self, logits_row: np.ndarray) -> int:
         """Host-side sampling oracle.  The engine samples on device inside
@@ -811,7 +878,32 @@ class PagedServingEngine:
             jnp.int32(self._step_idx))
         self._step_idx += 1
         self.seq_lens += num_new
+        self._reclaim_expired()
         return np.asarray(toks)
+
+    def _reclaim_expired(self):
+        """Free KV pages every token of which has slid out of the attention
+        window (all-attn_local patterns, prefix cache off — see __init__).
+        Freed table entries point at the garbage page; the window mask
+        already excludes those positions on every attention path (Pallas
+        decode/prefill kernels and the jnp fallback), so recycled pages can
+        hold another sequence's KV without being read.  slot.pages keeps a
+        0 placeholder so later positions stay index-aligned."""
+        if self._reclaim_window is None:
+            return
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            n = reclaimable_pages(int(self.seq_lens[i]),
+                                  self._reclaim_window, self.page)
+            pool = self._pools[self._shard(i)]
+            for j in range(min(n, len(slot.pages))):
+                pg = slot.pages[j]
+                if pg:
+                    pool.decref(pg)
+                    slot.pages[j] = 0
+                    self.table[i, j] = 0
+                    self.counters["expired_page_frees"] += 1
 
     def step(self) -> list[tuple[int, int]]:
         """One scheduler iteration; returns (rid, token) pairs emitted."""

@@ -43,6 +43,20 @@ from repro.core.types import PositConfig
 
 GARBAGE_PAGE = 0   # page index reserved for masked/invalid writes
 
+
+def reclaimable_pages(seq_len: int, window: int, page_size: int) -> int:
+    """How many leading pages of a sequence have slid *entirely* out of a
+    `window`-token attention window at length `seq_len` (post-append).
+
+    The newest query position is seq_len - 1 and attends kpos in
+    (seq_len - 1 - window, seq_len); page j (tokens [j*page, (j+1)*page))
+    is fully expired when (j+1)*page <= seq_len - window.  seq_len only
+    grows, so expiry is monotone: the engine frees expired pages eagerly
+    (sliding-window page reclamation) and both attention kernels' window
+    masks already hide whatever a freed page's id gets recycled into —
+    a long windowed decode holds O(window) live pages, not O(context)."""
+    return max(0, (seq_len - window) // page_size)
+
 # trace-time executions of the gather_kv dense-materialization fallback in
 # paged_attention, keyed by the reason it was taken.  On the Pallas path
 # (use_pallas(), i.e. TPU or the interpret-mode tier-1 drive) this must stay

@@ -116,3 +116,92 @@ def test_rglru_decode_step_matches_scan():
         outs.append(step[:, 0])
     got = jnp.stack(outs, axis=1)
     np.testing.assert_allclose(got, full, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# step-vs-scan bit-parity through the serving recurrent-scan dispatchers:
+# a single-token stateful step applied T times must reproduce the full-
+# sequence scan *bit-for-bit* (not approximately) in every state format —
+# that identity is what makes the paged engine's chunked prefill and
+# per-token decode agree with the dense oracle exactly.
+# --------------------------------------------------------------------------
+def _state_cfgs():
+    from repro.core.types import P8_2, P16_2
+    return [("float", None), ("p8", P8_2), ("p16", P16_2)]
+
+
+def _bits(x):
+    return np.asarray(x).view(np.uint32)
+
+
+def test_wkv_step_matches_scan_bitwise():
+    from repro.kernels import ops as kops
+    B, H, T, dh = 2, 2, 12, 8
+    rng = np.random.default_rng(7)
+    r, k, v = (jnp.asarray(rng.normal(size=(B, H, T, dh)), jnp.float32)
+               for _ in range(3))
+    logw = -jnp.asarray(rng.uniform(0.01, 2.0, (B, H, T, dh)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, dh)), jnp.float32)
+    for name, pcfg in _state_cfgs():
+        S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        y_full, S_full = kops.wkv_scan(r, k, v, logw, u, S0, cfg_state=pcfg)
+        S = S0
+        ys = []
+        for t in range(T):
+            sl = slice(t, t + 1)
+            y, S = kops.wkv_scan(r[:, :, sl], k[:, :, sl], v[:, :, sl],
+                                 logw[:, :, sl], u, S, cfg_state=pcfg)
+            ys.append(y)
+        y_step = jnp.concatenate(ys, axis=2)
+        np.testing.assert_array_equal(_bits(y_step), _bits(y_full),
+                                      err_msg=name)
+        np.testing.assert_array_equal(_bits(S), _bits(S_full),
+                                      err_msg=name)
+
+
+def test_wkv_step_posit_pool_state_matches_dense_state():
+    """Threading the state as PositArray pool bits (the engine's state
+    pool) must equal threading it as round-tripped raw f32 (the dense
+    cache tuple) — encode∘decode is the identity on canonical bits."""
+    from repro.core.array import PositArray
+    from repro.core.convert import f32_to_posit
+    from repro.core.types import P16_2
+    from repro.kernels import ops as kops
+    B, H, T, dh = 1, 2, 6, 8
+    rng = np.random.default_rng(8)
+    r, k, v = (jnp.asarray(rng.normal(size=(B, H, T, dh)), jnp.float32)
+               for _ in range(3))
+    logw = -jnp.asarray(rng.uniform(0.01, 2.0, (B, H, T, dh)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, dh)), jnp.float32)
+    Sf = jnp.zeros((B, H, dh, dh), jnp.float32)
+    Sp = PositArray(f32_to_posit(Sf, P16_2), P16_2)
+    for t in range(T):
+        sl = slice(t, t + 1)
+        args = (r[:, :, sl], k[:, :, sl], v[:, :, sl], logw[:, :, sl], u)
+        yf, Sf = kops.wkv_scan(*args, Sf, cfg_state=P16_2)
+        yp, Sp = kops.wkv_scan(*args, Sp, cfg_state=P16_2)
+        assert isinstance(Sp, PositArray)
+        np.testing.assert_array_equal(_bits(yf), _bits(yp))
+        np.testing.assert_array_equal(np.asarray(Sp.to_f32()),
+                                      np.asarray(Sf))
+
+
+def test_rglru_step_matches_scan_bitwise():
+    from repro.kernels import ops as kops
+    B, T, d = 3, 15, 16
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.uniform(0.5, 0.999, (B, T, d)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
+    for name, pcfg in _state_cfgs():
+        h0 = jnp.zeros((B, d), jnp.float32)
+        y_full, h_full = kops.rglru_scan(a, b, h0, cfg_state=pcfg)
+        h = h0
+        ys = []
+        for t in range(T):
+            y, h = kops.rglru_scan(a[:, t:t + 1], b[:, t:t + 1], h,
+                                   cfg_state=pcfg)
+            ys.append(y)
+        y_step = jnp.concatenate(ys, axis=1)
+        np.testing.assert_array_equal(_bits(y_step), _bits(y_full),
+                                      err_msg=name)
+        np.testing.assert_array_equal(_bits(h), _bits(h_full), err_msg=name)

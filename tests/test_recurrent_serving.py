@@ -1,0 +1,216 @@
+"""Recurrent & hybrid serving through the pluggable cache backends.
+
+The paged engine serves RWKV6 (pure state-pool), and a Griffin-style
+hybrid (rglru state slots + windowed paged KV), with greedy tokens
+bit-identical to the dense generate() oracle across float/p8/p16 state
+formats — on the counted jnp oracle path, on the Pallas kernel path
+(interpret mode, zero recurrent fallbacks asserted), and on a 4-device
+data-parallel mesh (subprocess).  The sliding-window reclamation test pins
+that a long windowed decode holds O(window) pages, not O(context).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.types import P8_2, P16_2
+from repro.models.transformer import init_params
+from repro.quant.policy import PositPolicy
+from repro.serving.engine import PagedServingEngine, generate
+
+FORMATS = [("float", None), ("p8", P8_2), ("p16", P16_2)]
+
+
+def _cfg(arch: str, pcfg, tag: str):
+    cfg = get_smoke(arch)
+    name = f"{cfg.name}-{tag}"
+    if pcfg is None:
+        return dataclasses.replace(cfg, name=name)
+    return dataclasses.replace(cfg, name=name,
+                               policy=PositPolicy(kv_cache=pcfg))
+
+
+def _drain_vs_dense(cfg, *, max_new=5, n_req=3, seed=0, **eng_kwargs):
+    """Engine drain vs per-request dense generate(); asserts bit-identical
+    greedy tokens.  Returns the engine (for stats assertions)."""
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab, size=int(L)).astype(np.int32)
+               for L in rng.integers(4, 18, size=n_req)]
+    kw = dict(max_seqs=4, page_size=8, table_width=8, prefill_chunk=8)
+    kw.update(eng_kwargs)
+    eng = PagedServingEngine(params, cfg, **kw)
+    rids = [eng.submit(p, max_new) for p in prompts]
+    out = eng.run()
+    for rid, p in zip(rids, prompts):
+        dense = np.asarray(
+            generate(params, cfg, jnp.asarray(p)[None], max_new))[0]
+        np.testing.assert_array_equal(out[rid], dense)
+    return eng
+
+
+@pytest.mark.parametrize("fmt,pcfg", FORMATS)
+def test_rwkv6_engine_matches_dense(fmt, pcfg):
+    cfg = _cfg("rwkv6-3b", pcfg, fmt)
+    eng = _drain_vs_dense(cfg)
+    st = eng.stats()
+    assert st["state_slot_allocs"] == 3
+    # pure-recurrent layout: the prefix cache must have auto-disabled
+    # (state slots are not content-addressable) and no KV paging ran
+    assert eng._prefix is None
+    assert st["prefix_hits"] == st["prefix_misses"] == 0
+
+
+@pytest.mark.parametrize("fmt,pcfg", FORMATS)
+def test_griffin_hybrid_engine_matches_dense(fmt, pcfg):
+    cfg = _cfg("recurrentgemma-9b", pcfg, fmt)
+    eng = _drain_vs_dense(cfg, seed=1)
+    st = eng.stats()
+    assert st["state_slot_allocs"] == 3
+    assert eng._prefix is None          # hybrid contains state layers
+
+
+def test_kernel_path_bit_parity_zero_fallbacks(monkeypatch):
+    """The Pallas fused recurrent-scan route (interpret mode): engine and
+    dense drains are bit-identical and never fall back to the jnp oracle.
+    Distinct cfg names from the oracle-path tests: the jitted steps cache
+    per config, and the two environments trace different kernels."""
+    from repro.kernels.ops import RECURRENT_FALLBACKS
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    monkeypatch.delenv("REPRO_FORCE_GATHER", raising=False)
+    for arch in ("rwkv6-3b", "recurrentgemma-9b"):
+        cfg = _cfg(arch, P16_2, "kernel-p16")
+        before = dict(RECURRENT_FALLBACKS)
+        eng = _drain_vs_dense(cfg, n_req=2)
+        assert dict(RECURRENT_FALLBACKS) == before, arch
+        assert eng.stats()["recurrent_fallbacks"] == 0
+
+
+def test_windowed_decode_holds_o_window_pages():
+    """Sliding-window reclamation: a 126-token decode against window=32,
+    page=8 completes inside a 7-usable-page pool (O(window), not the 16
+    pages O(context) would need), frees expired pages, never preempts, and
+    stays bit-identical to dense."""
+    cfg = dataclasses.replace(get_smoke("recurrentgemma-9b"),
+                              name="rg-smoke-reclaim")
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(1, cfg.vocab, size=6).astype(np.int32)
+    max_new = 120
+    eng = PagedServingEngine(params, cfg, max_seqs=2, page_size=8,
+                             table_width=32, num_pages=8, prefill_chunk=8,
+                             prefix_cache=False)
+    assert eng._reclaim_window == cfg.window
+    rid = eng.submit(prompt, max_new)
+    out = eng.run()
+    st = eng.stats()
+    assert st["expired_page_frees"] > 0
+    assert st["preempted"] == 0
+    dense = np.asarray(
+        generate(params, cfg, jnp.asarray(prompt)[None], max_new))[0]
+    np.testing.assert_array_equal(out[rid], dense)
+    # every slot freed at retirement despite the zero placeholders
+    assert st["free_pages"] == eng.pages_per_shard - 1
+
+
+def test_reclamation_gated_off_with_prefix_cache_or_full_attn():
+    """Reclamation requires *every* attention layer windowed and the
+    prefix cache off — a full-attn layer still reads expired pages and a
+    cached page must stay resident for future prefix hits."""
+    cfg = dataclasses.replace(get_smoke("recurrentgemma-9b"),
+                              name="rg-smoke-noreclaim")
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    # hybrid contains state layers -> prefix_cache auto-disables, so the
+    # prefix gate is exercised on a pure-attn_local config instead
+    attn_cfg = dataclasses.replace(cfg, block_pattern=("attn_local",),
+                                   name="attn-local-prefix")
+    attn_params = init_params(jax.random.PRNGKey(1), attn_cfg)
+    eng = PagedServingEngine(attn_params, attn_cfg, max_seqs=2, page_size=8,
+                             table_width=8, prefill_chunk=8,
+                             prefix_cache=True)
+    assert eng._prefix is not None and eng._reclaim_window is None
+    full = dataclasses.replace(cfg, block_pattern=("rglru", "rglru", "attn"),
+                               name="rg-smoke-fullattn")
+    eng2 = PagedServingEngine(init_params(jax.random.PRNGKey(1), full), full,
+                              max_seqs=2, page_size=8, table_width=8,
+                              prefill_chunk=8, prefix_cache=False)
+    assert eng2._reclaim_window is None
+
+
+def test_pure_recurrent_ignores_page_capacity():
+    """State-pool sequences are O(1): a request far beyond
+    table_width*page_size must be accepted and served."""
+    cfg = _cfg("rwkv6-3b", None, "longreq")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab, size=40).astype(np.int32)
+    eng = PagedServingEngine(params, cfg, max_seqs=2, page_size=8,
+                             table_width=2, prefill_chunk=8)
+    rid = eng.submit(prompt, 4)     # 44 tokens >> 2*8 page capacity
+    out = eng.run()
+    dense = np.asarray(generate(params, cfg, jnp.asarray(prompt)[None], 4))[0]
+    np.testing.assert_array_equal(out[rid], dense)
+
+
+# ---- the acceptance row: 4-device DP mesh, subprocess --------------------
+_SUBPROCESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_smoke
+    from repro.core.types import P16_2
+    from repro.models.transformer import init_params
+    from repro.quant.policy import PositPolicy
+    from repro.serving.engine import PagedServingEngine, generate
+    from repro.launch.mesh import make_serving_mesh
+
+    mesh = make_serving_mesh(4, 1)
+    for arch in ("rwkv6-3b", "recurrentgemma-9b"):
+        cfg = dataclasses.replace(get_smoke(arch),
+                                  policy=PositPolicy(kv_cache=P16_2),
+                                  name=f"{arch}-dp4-p16")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(1, cfg.vocab, size=L).astype(np.int32)
+                   for L in (5, 9, 13, 7)]
+        eng = PagedServingEngine(params, cfg, max_seqs=4, page_size=8,
+                                 table_width=8, prefill_chunk=8, mesh=mesh)
+        rids = [eng.submit(p, 5) for p in prompts]
+        out = eng.run()
+        for rid, p in zip(rids, prompts):
+            dense = np.asarray(
+                generate(params, cfg, jnp.asarray(p)[None], 5))[0]
+            assert np.array_equal(out[rid], dense), (arch, rid)
+
+    # TP over recurrent layers is rejected, not silently mis-sharded
+    cfg = dataclasses.replace(get_smoke("rwkv6-3b"), name="rwkv6-tp-reject")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    try:
+        PagedServingEngine(params, cfg, max_seqs=4, page_size=8,
+                           table_width=8, mesh=make_serving_mesh(2, 2))
+    except ValueError as e:
+        assert "data-parallel only" in str(e)
+    else:
+        raise AssertionError("ntp=2 accepted for a recurrent pattern")
+    print("RECURRENT-DP4-OK")
+""")
+
+
+def test_recurrent_dp4_bit_parity_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "RECURRENT-DP4-OK" in out.stdout

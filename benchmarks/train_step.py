@@ -1,0 +1,149 @@
+"""Forward+backward train-step time: Pallas training kernels vs the jnp
+oracles, across posit weight formats.
+
+Three legs per format, all through training.train_step.make_train_step:
+
+    kernel:   REPRO_USE_PALLAS on — flash fwd/bwd, grouped MoE and
+              posit GEMM custom_vjp backwards all dispatch Pallas
+              (interpret mode on CPU; real kernels on TPU)
+    bwd-ref:  kernels forward, REPRO_FORCE_BWD_REFERENCE pins the counted
+              jnp reference backwards — isolates the backward kernels'
+              contribution
+    jnp:      REPRO_USE_PALLAS off — the pure-jnp einsum path end to end
+
+On the CPU backend the kernel legs run the Pallas *interpreter*, so
+absolute ratios are meaningless there (interpret mode is a correctness
+tool); the jnp column is the CPU-meaningful number and the leg structure
+is what the nightly TPU lane consumes.  BWD_FALLBACKS deltas are recorded
+per leg — the kernel leg must report {} (the zero-fallback training
+invariant, same as tier-1 asserts).
+
+    PYTHONPATH=src python -m benchmarks.train_step [--smoke]
+
+Writes experiments/BENCH_training.json (nightly CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "BENCH_training.json")
+
+_LEG_ENV = {
+    "kernel": {"REPRO_USE_PALLAS": "1", "REPRO_FORCE_BWD_REFERENCE": None},
+    "bwd-ref": {"REPRO_USE_PALLAS": "1", "REPRO_FORCE_BWD_REFERENCE": "1"},
+    "jnp": {"REPRO_USE_PALLAS": None, "REPRO_FORCE_BWD_REFERENCE": None},
+}
+
+
+def _set_env(leg: str, backend: str):
+    env = dict(_LEG_ENV[leg])
+    if backend == "cpu" and env.get("REPRO_USE_PALLAS"):
+        env["REPRO_PALLAS_INTERPRET"] = "1"
+    else:
+        env["REPRO_PALLAS_INTERPRET"] = None
+    for k, v in env.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v
+
+
+def _one_leg(posit: str, leg: str, smoke: bool, reps: int):
+    import jax
+    from repro.core.types import P8_2, P16_2
+    from repro.kernels import ops as kops
+    from repro.models.transformer import ModelConfig, init_params
+    from repro.optim.adamw import OptConfig, init_state
+    from repro.quant.policy import PositPolicy
+    from repro.training.train_step import make_train_step
+
+    pcfg = {"p8": P8_2, "p16": P16_2, "off": None}[posit]
+    dims = (dict(n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+                 vocab=256) if smoke else
+            dict(n_layers=4, d_model=256, n_heads=8, n_kv=4, d_ff=768,
+                 vocab=2048))
+    # distinct names per leg: each traces a different dispatch path
+    cfg = ModelConfig(f"bench-train-{posit}-{leg}", **dims,
+                      policy=PositPolicy(weights=pcfg))
+    _set_env(leg, jax.default_backend())
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = OptConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+    opt = init_state(params, opt_cfg)
+    step = make_train_step(cfg, opt_cfg, donate=False)
+    B, S = (4, 33) if smoke else (8, 129)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab)}
+    kops.BWD_FALLBACKS.clear()
+    p, o, m = step(params, opt, batch)        # compile + fallback counting
+    jax.block_until_ready(p)
+    fallbacks = dict(kops.BWD_FALLBACKS)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        p, o, m = step(p, o, batch)
+        jax.block_until_ready(p)
+        best = min(best, time.time() - t0)
+    tokens = B * (S - 1)
+    return {"step_ms": round(best * 1e3, 2),
+            "tok_s": round(tokens / best, 1),
+            "bwd_fallbacks": {k: int(v) for k, v in fallbacks.items()}}
+
+
+def bench(smoke: bool = False, posits=("off", "p8", "p16")) -> dict:
+    import jax
+    reps = 2 if smoke else 5
+    saved = {k: os.environ.get(k) for k in
+             ("REPRO_USE_PALLAS", "REPRO_PALLAS_INTERPRET",
+              "REPRO_FORCE_BWD_REFERENCE")}
+    rows = []
+    try:
+        for posit in posits:
+            legs = {leg: _one_leg(posit, leg, smoke, reps)
+                    for leg in ("kernel", "bwd-ref", "jnp")}
+            assert not legs["kernel"]["bwd_fallbacks"], (
+                "kernel leg fell back", legs["kernel"]["bwd_fallbacks"])
+            rows.append({"posit": posit, **legs})
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+    res = {"smoke": smoke, "backend": jax.default_backend(),
+           "note": ("cpu kernel legs run the Pallas interpreter "
+                    "(correctness harness, not perf); jnp is the "
+                    "CPU-meaningful column.  kernel leg must show "
+                    "bwd_fallbacks == {}"),
+           "rows": rows}
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"wrote {os.path.normpath(RESULTS_PATH)}")
+    return res
+
+
+def run(report):
+    """benchmarks.run entry point."""
+    t0 = time.time()
+    res = bench(smoke=True)
+    report("train_step", (time.time() - t0) * 1e6, res)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print(json.dumps(bench(smoke=args.smoke), indent=1))
+
+
+if __name__ == "__main__":
+    main()

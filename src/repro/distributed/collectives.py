@@ -109,8 +109,35 @@ def tp_ctx() -> TPContext | None:
     return getattr(_TP, "ctx", None)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _psum_g(x, axis: str, compress):
+    if compress is not None:
+        return compressed_psum(x, axis, compress)
+    return jax.lax.psum(x, axis)
+
+
+def _psum_g_fwd(x, axis: str, compress):
+    return _psum_g(x, axis, compress), None
+
+
+def _psum_g_bwd(axis: str, compress, _, g):
+    return (g,)
+
+
+_psum_g.defvjp(_psum_g_fwd, _psum_g_bwd)
+
+
 def block_psum(x):
-    """The one all-reduce a row-parallel block output owes under TP.
+    """The one all-reduce a row-parallel block output owes under TP —
+    Megatron's g-operator: psum forward, *identity* backward.
+
+    The identity backward is load-bearing for training: under shard_map
+    with check_rep=False, autodiff transposes a raw lax.psum to another
+    psum, so a replicated cotangent flowing into the block output would
+    multiply by the axis size at every block.  The block's output cotangent
+    is already replicated (everything downstream of the psum is replicated
+    compute), so the correct pullback is the identity — block_grad_sync at
+    the block *entry* is where the one real backward psum happens.
 
     Identity outside a tensor_parallel context.  With a compress format the
     gather half of the psum moves posit ints instead of f32 (profitable on
@@ -120,9 +147,44 @@ def block_psum(x):
     ctx = tp_ctx()
     if ctx is None:
         return x
-    if ctx.compress is not None:
-        return compressed_psum(x, ctx.axis, ctx.compress)
-    return jax.lax.psum(x, ctx.axis)
+    return _psum_g(x, ctx.axis, ctx.compress)
+
+
+# --------------------------------------------------------------------------
+# Megatron f-operator: the training-side dual of block_psum
+# --------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_psum(x, axis: str):
+    return x
+
+
+def _grad_psum_fwd(x, axis: str):
+    return x, None
+
+
+def _grad_psum_bwd(axis: str, _, g):
+    return (jax.lax.psum(g, axis),)
+
+
+_grad_psum.defvjp(_grad_psum_fwd, _grad_psum_bwd)
+
+
+def block_grad_sync(x):
+    """Megatron's f-operator at a TP block *entry*: identity forward, psum
+    over the TP axis backward.
+
+    A column/row-parallel block consumes a replicated activation and its
+    backward produces a partial d(input) per shard (each shard only saw its
+    weight slice); the psum here restores the full gradient so everything
+    upstream (embeddings, earlier blocks' row-parallel outputs) sees the
+    same replicated cotangent on every member.  Identity outside a
+    tensor_parallel context — serving never differentiates, so block_psum
+    stays the only collective the forward pays.
+    """
+    ctx = tp_ctx()
+    if ctx is None:
+        return x
+    return _grad_psum(x, ctx.axis)
 
 
 def sharded_argmax(logits: jnp.ndarray, axis_name: str) -> jnp.ndarray:

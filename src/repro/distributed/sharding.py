@@ -200,6 +200,37 @@ def serving_param_pspecs(params, mesh):
     return jax.tree_util.tree_map_with_path(assign, params)
 
 
+def train_param_pspecs(params, mesh):
+    """Megatron TP specs for the shard_map training step.
+
+    Serving's column/row-parallel layout minus vocab parallelism: embed
+    and unembed tables stay replicated so the loss (softmax over the full
+    vocab) and the embedding-table gradient need no vocab-shard psums —
+    the unembed matmul is then replicated compute, which is exactly why
+    the training step applies the f-operator (collectives.block_grad_sync)
+    at TP block entries only and never at the final norm.  FSDP dims drop
+    to replication ('data' carries pure DP with the posit-compressed
+    gradient sync instead); column-parallel biases shard like serving.
+    """
+    extra = [
+        (r"embed/table$", (None, None)),
+        (r"unembed/w$", (None, None)),
+        (r"unembed/b$", (None,)),
+        (r"(wq|wk|wv|wg|w_up|w_gate|wr)/b$", ("model",)),
+    ]
+    rules = [(re.compile(pat), spec) for pat, spec in extra + _rules()]
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        for pat, trailing in rules:
+            if pat.search(ps):
+                tr = tuple(None if a == FSDP else a for a in trailing)
+                return _fit(tr, leaf.shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
 def paged_pool_pspecs(pages, mesh):
     """Serving pool specs, per backend (serving/backends.py):
 

@@ -150,9 +150,10 @@ def _paged_decode_kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = out.reshape(n_kv * groups, d)
 
 
-def _prefill_body(sl_ref, qo_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, cfg_kv, n_kv, groups, bq, bk,
-                  nkv_blocks, scale, causal, window, softcap):
+def _prefill_body(sl_ref, qo_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+                  cfg_kv, n_kv, groups, bq, bk,
+                  nkv_blocks, scale, causal, window, softcap,
+                  with_lse=False):
     """One (sequence, q-tile, kv-tile) cell of the fused prefill grid.
 
     Shared by the paged entry (the BlockSpec index_map resolved the KV tile
@@ -162,7 +163,16 @@ def _prefill_body(sl_ref, qo_ref, q_ref, k_ref, v_ref, o_ref,
     materialized never exists.  GQA keeps the group dim folded into the
     query rows: q is (n_kv, groups*bq, d) so one batched dot per kv head
     feeds the MXU without repeating K/V across groups.
+
+    with_lse: also emit the log-sum-exp rows (m + log l), the residual the
+    backward kernels need to rebuild p = exp(s - lse) without re-running the
+    online softmax.
     """
+    if with_lse:
+        lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        lse_ref = None
+        m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     i = pl.program_id(1)
     j = pl.program_id(2)
@@ -217,8 +227,15 @@ def _prefill_body(sl_ref, qo_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(j == nkv_blocks - 1)
     def _done():
         l = l_ref[...][:, :, :1]
-        out = acc_ref[...] / jnp.where(l == 0, 1.0, l)
+        safe_l = jnp.where(l == 0, 1.0, l)
+        out = acc_ref[...] / safe_l
         o_ref[0] = out.reshape(n_kv * groups, bq, d)
+        if lse_ref is not None:
+            # fully-masked rows (l == 0, m == -inf) get lse = 0: finite, and
+            # their p = exp(_NEG - 0) underflows to exactly 0 in the backward
+            m = m_ref[...][:, :, :1]
+            lse = jnp.where(l == 0, 0.0, m + jnp.log(safe_l))
+            lse_ref[0] = lse[..., 0].reshape(n_kv * groups, bq)
 
 
 def _prefill_scratch(n_kv, groups, bq, d):
@@ -310,14 +327,14 @@ def paged_flash_prefill(q: jnp.ndarray, k_pages: jnp.ndarray,
 @functools.partial(
     jax.jit,
     static_argnames=("cfg_kv", "causal", "window", "softcap", "bq", "bk",
-                     "interpret"),
+                     "return_lse", "interpret"),
 )
 def flash_prefill_contiguous(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                              kv_len: jnp.ndarray, q_offset: jnp.ndarray, *,
                              cfg_kv: PositConfig | None = None,
                              causal: bool = True, window: int | None = None,
                              softcap: float | None = None, bq: int = 128,
-                             bk: int = 256,
+                             bk: int = 256, return_lse: bool = False,
                              interpret: bool = False) -> jnp.ndarray:
     """The prefill kernel over a contiguous (dense-cache / training) KV.
 
@@ -333,6 +350,10 @@ def flash_prefill_contiguous(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     d=128 GQA shapes — small enough to double-buffer the posit tile
     fetches, large enough that every HBM byte feeds >= bq MXU MACs (well
     past the ~300 flops/byte ridge at posit16 width).
+
+    return_lse: additionally return the row log-sum-exps [B, H, Sq] f32 —
+    the residual the training backward saves so the dQ/dK/dV kernels can
+    rebuild p = exp(s - lse) tile by tile.
     """
     B, H, Sq, d = q.shape
     _, n_kv, Skv, _ = k.shape
@@ -354,7 +375,17 @@ def flash_prefill_contiguous(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     body = functools.partial(
         _prefill_body, cfg_kv=cfg_kv, n_kv=n_kv, groups=groups, bq=bq_,
         bk=bk_, nkv_blocks=nk, scale=scale, causal=causal, window=window,
-        softcap=softcap)
+        softcap=softcap, with_lse=return_lse)
+
+    o_spec = pl.BlockSpec((1, H, bq_, d), lambda b, i, j, sl, qo: (b, 0, i, 0))
+    o_shape = jax.ShapeDtypeStruct((B, H, Sq + pq, d), jnp.float32)
+    if return_lse:
+        out_specs = [o_spec,
+                     pl.BlockSpec((1, H, bq_), lambda b, i, j, sl, qo: (b, 0, i))]
+        out_shape = [o_shape,
+                     jax.ShapeDtypeStruct((B, H, Sq + pq), jnp.float32)]
+    else:
+        out_specs, out_shape = o_spec, o_shape
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -367,19 +398,252 @@ def flash_prefill_contiguous(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pl.BlockSpec((1, n_kv, bk_, d),
                          lambda b, i, j, sl, qo: (b, 0, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, H, bq_, d),
-                               lambda b, i, j, sl, qo: (b, 0, i, 0)),
+        out_specs=out_specs,
         scratch_shapes=_prefill_scratch(n_kv, groups, bq_, d),
     )
-    out = pl.pallas_call(
+    res = pl.pallas_call(
         body,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, d), jnp.float32),
+        out_shape=out_shape,
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=_PREFILL_SEMANTICS),
         interpret=interpret,
     )(kv_len, q_offset, q, k, v)
-    return out[:, :, :Sq, :]
+    if return_lse:
+        out, lse = res
+        return out[:, :, :Sq, :], lse[:, :, :Sq]
+    return res[:, :, :Sq, :]
+
+
+def _bwd_probs(q, k, lse, qo_b, sl_b, i, j, *, n_kv, groups, bq, bk, scale,
+               causal, window, softcap):
+    """Recompute p = exp(s - lse) for one (q-tile, kv-tile) pair with the
+    forward's exact masking, plus the softcap chain factor d s_cap / d s.
+
+    The chain factor is taken from the *unmasked* capped scores (bounded in
+    [-softcap, softcap]); masked positions are killed through p alone, so no
+    inf/NaN from (_NEG / softcap)**2 can leak into the products.
+    """
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        t = jnp.tanh(s / softcap)
+        s = t * softcap
+        dcap = 1.0 - t * t
+    else:
+        dcap = None
+    qpos = qo_b + i * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (n_kv, groups * bq, bk), 1) % bq
+    kpos = j * bk + jax.lax.broadcasted_iota(
+        jnp.int32, (n_kv, groups * bq, bk), 2)
+    valid = kpos < sl_b
+    if causal:
+        valid = valid & (qpos >= kpos)
+    if window is not None:
+        valid = valid & (qpos - kpos < window)
+    p = jnp.exp(jnp.where(valid, s, _NEG) - lse)
+    return p, dcap
+
+
+def _prefill_bwd_dq_body(sl_ref, qo_ref, q_ref, k_ref, v_ref, do_ref,
+                         lse_ref, delta_ref, dq_ref, dq_acc, *, cfg_kv,
+                         n_kv, groups, bq, bk, nkv_blocks, scale, causal,
+                         window, softcap):
+    """dQ tile: sweep the kv axis, accumulating ds @ K in an f32 VMEM
+    scratch (the per-tile quire) and writing once at the last kv block.
+    Posit KV decodes in VMEM exactly as in the forward — the backward
+    never materializes an f32 cache either.
+    """
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    d = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32).reshape(n_kv, groups * bq, d)
+    k = k_ref[0]
+    v = v_ref[0]
+    if cfg_kv is not None:
+        k = decode_to_f32(k, cfg_kv)
+        v = decode_to_f32(v, cfg_kv)
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+    lse = lse_ref[0].reshape(n_kv, groups * bq, 1)
+    p, dcap = _bwd_probs(q, k, lse, qo_ref[b], sl_ref[b], i, j, n_kv=n_kv,
+                         groups=groups, bq=bq, bk=bk, scale=scale,
+                         causal=causal, window=window, softcap=softcap)
+    do = do_ref[0].astype(jnp.float32).reshape(n_kv, groups * bq, d)
+    dp = jax.lax.dot_general(do, v, (((2,), (2,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    delta = delta_ref[0].reshape(n_kv, groups * bq, 1)
+    ds = p * (dp - delta)
+    if dcap is not None:
+        ds = ds * dcap
+    # ds is d loss / d (scaled scores): one scale chains back to q
+    dq_acc[...] += jax.lax.dot_general(
+        ds, k, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(j == nkv_blocks - 1)
+    def _done():
+        dq_ref[0] = dq_acc[...].reshape(n_kv * groups, bq, d)
+
+
+def _prefill_bwd_dkv_body(sl_ref, qo_ref, q_ref, k_ref, v_ref, do_ref,
+                          lse_ref, delta_ref, dk_ref, dv_ref, dk_acc,
+                          dv_acc, *, n_kv, groups, bq, bk, nq_blocks, scale,
+                          causal, window, softcap):
+    """dK/dV tile: the kv tile is pinned (axis 1), the q axis sweeps (axis
+    2) carrying the two f32 accumulators.  The folded (group, q-row) axis is
+    the contraction, so the GQA group-sum falls out of the same reshape the
+    forward uses.  Only called for float KV — posit caches carry no
+    tangent.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    d = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32).reshape(n_kv, groups * bq, d)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+
+    lse = lse_ref[0].reshape(n_kv, groups * bq, 1)
+    p, dcap = _bwd_probs(q, k, lse, qo_ref[b], sl_ref[b], i, j, n_kv=n_kv,
+                         groups=groups, bq=bq, bk=bk, scale=scale,
+                         causal=causal, window=window, softcap=softcap)
+    do = do_ref[0].astype(jnp.float32).reshape(n_kv, groups * bq, d)
+    # padded / garbage q rows contribute nothing: their do is zero-padded,
+    # so p^T do and ds^T q vanish row by row
+    dv_acc[...] += jax.lax.dot_general(
+        p, do, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((2,), (2,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    delta = delta_ref[0].reshape(n_kv, groups * bq, 1)
+    ds = p * (dp - delta)
+    if dcap is not None:
+        ds = ds * dcap
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(i == nq_blocks - 1)
+    def _done():
+        dk_ref[0] = dk_acc[...]
+        dv_ref[0] = dv_acc[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg_kv", "causal", "window", "softcap", "bq", "bk",
+                     "interpret"),
+)
+def flash_prefill_bwd_contiguous(q: jnp.ndarray, k: jnp.ndarray,
+                                 v: jnp.ndarray, o: jnp.ndarray,
+                                 lse: jnp.ndarray, do: jnp.ndarray,
+                                 kv_len: jnp.ndarray, q_offset: jnp.ndarray,
+                                 *, cfg_kv: PositConfig | None = None,
+                                 causal: bool = True,
+                                 window: int | None = None,
+                                 softcap: float | None = None, bq: int = 128,
+                                 bk: int = 256, interpret: bool = False):
+    """Backward of flash_prefill_contiguous: (dQ, dK, dV).
+
+    Two kernels over the same tiles as the forward: dQ pins the q tile and
+    sweeps kv; dK/dV pin the kv tile and sweep q.  Both rebuild the scores
+    from (q, k, lse) — classic flash backward, no [Sq, Skv] matrix ever
+    exists — and accumulate in per-tile f32 VMEM scratch (the PERCIVAL
+    quire analogue: narrow storage, wide accumulation).  delta = rowsum
+    (dO * O) is the only host-side precompute.  Posit KV (cfg_kv set)
+    decodes in VMEM for dQ and returns dK = dV = None: storage ints carry
+    no tangent, matching the jnp-reference oracle.
+    """
+    B, H, Sq, d = q.shape
+    _, n_kv, Skv, _ = k.shape
+    groups = H // n_kv
+    scale = 1.0 / (d ** 0.5)
+    bq_ = min(bq, max(8, Sq))
+    bk_ = min(bk, Skv)
+    pq = (-Sq) % bq_
+    pk = (-Skv) % bk_
+
+    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(-1)
+    lse = lse.astype(jnp.float32)
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        do = jnp.pad(do, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        lse = jnp.pad(lse, ((0, 0), (0, 0), (0, pq)))
+        delta = jnp.pad(delta, ((0, 0), (0, 0), (0, pq)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq, nk = (Sq + pq) // bq_, (Skv + pk) // bk_
+
+    qd_spec = pl.BlockSpec((1, H, bq_, d), lambda b, i, j, sl, qo: (b, 0, i, 0))
+    kv_spec = pl.BlockSpec((1, n_kv, bk_, d),
+                           lambda b, i, j, sl, qo: (b, 0, j, 0))
+    row_spec = pl.BlockSpec((1, H, bq_), lambda b, i, j, sl, qo: (b, 0, i))
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _prefill_bwd_dq_body, cfg_kv=cfg_kv, n_kv=n_kv, groups=groups,
+            bq=bq_, bk=bk_, nkv_blocks=nk, scale=scale, causal=causal,
+            window=window, softcap=softcap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nq, nk),
+            in_specs=[qd_spec, kv_spec, kv_spec, qd_spec, row_spec, row_spec],
+            out_specs=qd_spec,
+            scratch_shapes=[pltpu.VMEM((n_kv, groups * bq_, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, d), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=_PREFILL_SEMANTICS),
+        interpret=interpret,
+    )(kv_len, q_offset, q, k, v, do, lse, delta)[:, :, :Sq, :]
+
+    if cfg_kv is not None:
+        return dq, None, None
+
+    # kv tile on the parallel axis 1, q sweep (with the accumulators) on
+    # the trailing "arbitrary" axis
+    qd_spec2 = pl.BlockSpec((1, H, bq_, d),
+                            lambda b, j, i, sl, qo: (b, 0, i, 0))
+    kv_spec2 = pl.BlockSpec((1, n_kv, bk_, d),
+                            lambda b, j, i, sl, qo: (b, 0, j, 0))
+    row_spec2 = pl.BlockSpec((1, H, bq_), lambda b, j, i, sl, qo: (b, 0, i))
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _prefill_bwd_dkv_body, n_kv=n_kv, groups=groups, bq=bq_, bk=bk_,
+            nq_blocks=nq, scale=scale, causal=causal, window=window,
+            softcap=softcap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nk, nq),
+            in_specs=[qd_spec2, kv_spec2, kv_spec2, qd_spec2, row_spec2,
+                      row_spec2],
+            out_specs=[kv_spec2, kv_spec2],
+            scratch_shapes=[pltpu.VMEM((n_kv, bk_, d), jnp.float32),
+                            pltpu.VMEM((n_kv, bk_, d), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((B, n_kv, Skv + pk, d), jnp.float32),
+                   jax.ShapeDtypeStruct((B, n_kv, Skv + pk, d), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=_PREFILL_SEMANTICS),
+        interpret=interpret,
+    )(kv_len, q_offset, q, k, v, do, lse, delta)
+    return dq, dk[:, :, :Skv, :], dv[:, :, :Skv, :]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg_kv", "window", "interpret"))

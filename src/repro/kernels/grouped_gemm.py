@@ -85,7 +85,7 @@ def _group_metadata(group_offsets: jnp.ndarray, n_m_tiles: int, bm: int,
 
 
 def _grouped_kernel(off_ref, mt_ref, gid_ref, valid_ref, x_ref, w_ref, o_ref,
-                    acc_ref, *, cfg_b, bm, nk, L):
+                    acc_ref, *, cfg_b, bm, nk, L, transpose_b=False):
     """One (n-tile, incidence, k-tile) cell.
 
     The BlockSpec index maps already resolved this incidence's x m-tile and
@@ -95,6 +95,10 @@ def _grouped_kernel(off_ref, mt_ref, gid_ref, valid_ref, x_ref, w_ref, o_ref,
     consecutive incidences of one physical tile — composes disjoint row
     sets; it initializes at the first incidence of the run and the output
     tile is written once, at the run's last incidence's final k step.
+
+    transpose_b contracts w on its *last* (storage) dim — the dX backward
+    streams the same posit weight tiles at storage width instead of
+    materializing a decoded f32 transpose.
     """
     t = pl.program_id(1)
     k = pl.program_id(2)
@@ -115,7 +119,12 @@ def _grouped_kernel(off_ref, mt_ref, gid_ref, valid_ref, x_ref, w_ref, o_ref,
         w = decode_to_f32(w, cfg_b)          # stage (i): posit tile -> f32
     else:
         w = w.astype(jnp.float32)
-    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if transpose_b:
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     last = jnp.logical_or(t == L - 1, mt_ref[jnp.minimum(t + 1, L - 1)] != mt)
 
@@ -132,12 +141,13 @@ _GROUPED_SEMANTICS = ("parallel", "arbitrary", "arbitrary")
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg_b", "bm", "bn", "bk", "interpret"),
+    static_argnames=("cfg_b", "bm", "bn", "bk", "transpose_b", "interpret"),
 )
 def posit_grouped_gemm(x: jnp.ndarray, w: jnp.ndarray,
                        group_offsets: jnp.ndarray, *,
                        cfg_b: PositConfig | None,
                        bm: int = 128, bn: int = 512, bk: int = 512,
+                       transpose_b: bool = False,
                        interpret: bool = False) -> jnp.ndarray:
     """x [S, k] (expert-sorted rows) x w [E, k, n] -> [S, n] f32.
 
@@ -149,52 +159,166 @@ def posit_grouped_gemm(x: jnp.ndarray, w: jnp.ndarray,
     einsums are gone either way); otherwise w holds posit storage ints that
     decode tile-by-tile in VMEM.
 
+    transpose_b: x [S, n] x w [E, k, n] -> [S, k], contracting w on its
+    last dim — the dX backward (dx = g @ w[g]^T) over the *same* storage
+    layout, so posit experts stream at posit width in the backward too.
+
     Per-step HBM weight traffic is (incidences x k x n) storage bytes with
     incidences <= ceil(S/bm) + E_active — for a decode step (S = B*top_k
     rows) that is the active experts' posit blocks only, vs the one-hot
     path's full E x k x n f32 materialization (the roofline columns in
     benchmarks/moe_throughput.py).
     """
-    S, K = x.shape
-    E, K2, N = w.shape
-    assert K == K2, (x.shape, w.shape)
+    S, C = x.shape
+    if transpose_b:
+        E, Nout, C2 = w.shape
+    else:
+        E, C2, Nout = w.shape
+    assert C == C2, (x.shape, w.shape, transpose_b)
     bm_ = min(bm, _round_up(max(S, 1), 8))
-    bk_ = min(bk, K)
-    bn_ = min(bn, max(128, N))
-    Sp, Kp, Np = (_round_up(S, bm_), _round_up(K, bk_), _round_up(N, bn_))
-    if (Sp, Kp) != (S, K):
-        x = jnp.pad(x, ((0, Sp - S), (0, Kp - K)))
-    if (Kp, Np) != (K, N):
+    bk_ = min(bk, C)
+    bn_ = min(bn, max(128, Nout))
+    Sp, Cp, Np = (_round_up(S, bm_), _round_up(C, bk_), _round_up(Nout, bn_))
+    if (Sp, Cp) != (S, C):
+        x = jnp.pad(x, ((0, Sp - S), (0, Cp - C)))
+    if (Cp, Np) != (C, Nout):
         # zero int padding is posit zero, so padded tiles decode to 0.0
-        w = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
-    nm, nk, nn = Sp // bm_, Kp // bk_, Np // bn_
+        if transpose_b:
+            w = jnp.pad(w, ((0, 0), (0, Np - Nout), (0, Cp - C)))
+        else:
+            w = jnp.pad(w, ((0, 0), (0, Cp - C), (0, Np - Nout)))
+    nm, nk, nn = Sp // bm_, Cp // bk_, Np // bn_
     L = nm + E - 1
     mt, gid, valid = _group_metadata(group_offsets, nm, bm_, E)
 
+    if transpose_b:
+        w_spec = pl.BlockSpec((1, bn_, bk_),
+                              lambda j, t, k, off, mt, gid, vl: (gid[t], j, k))
+    else:
+        w_spec = pl.BlockSpec((1, bk_, bn_),
+                              lambda j, t, k, off, mt, gid, vl: (gid[t], k, j))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(nn, L, nk),
         in_specs=[
             pl.BlockSpec((bm_, bk_),
                          lambda j, t, k, off, mt, gid, vl: (mt[t], k)),
-            pl.BlockSpec((1, bk_, bn_),
-                         lambda j, t, k, off, mt, gid, vl: (gid[t], k, j)),
+            w_spec,
         ],
         out_specs=pl.BlockSpec((bm_, bn_),
                                lambda j, t, k, off, mt, gid, vl: (mt[t], j)),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_grouped_kernel, cfg_b=cfg_b, bm=bm_, nk=nk, L=L),
+        functools.partial(_grouped_kernel, cfg_b=cfg_b, bm=bm_, nk=nk, L=L,
+                          transpose_b=transpose_b),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Sp, Np), jnp.float32),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=_GROUPED_SEMANTICS),
         interpret=interpret,
-    )(group_offsets.astype(jnp.int32), mt, gid, valid, x, w)[:S, :N]
+    )(group_offsets.astype(jnp.int32), mt, gid, valid, x, w)[:S, :Nout]
     # tiles that no group touches are never written (their buffer content
     # is undefined); rows outside [offsets[0], offsets[-1]) are defined to
     # be zero, so mask them rather than trust the unwritten buffer
     rows = jnp.arange(S)
     inb = (rows >= group_offsets[0]) & (rows < group_offsets[-1])
     return jnp.where(inb[:, None], out, 0.0)
+
+
+def _grouped_dw_kernel(off_ref, mt_ref, gid_ref, valid_ref, x_ref, g_ref,
+                       o_ref, acc_ref, *, bm, L):
+    """One (k-tile, n-tile, incidence) cell of the dW grid.
+
+    dw[g] = x[rows(g)]^T @ gout[rows(g)]: the incidence axis is innermost
+    and a group's incidences are consecutive, so one f32 scratch (the
+    per-group quire) accumulates the whole group's outer product across its
+    m-tiles; it zeroes at the group's first incidence and the [k, n] output
+    tile is written once at the group's last.  Rows of a straddling tile
+    that belong to the neighbour group are zeroed on the x side — zero rows
+    contribute nothing to the contraction.  Empty groups never appear in
+    the incidence table; their (unwritten) output blocks are masked by the
+    caller.
+    """
+    t = pl.program_id(2)
+    g = gid_ref[t]
+    first = jnp.logical_or(t == 0, gid_ref[jnp.maximum(t - 1, 0)] != g)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mt = mt_ref[t]
+    rows = mt * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    live = ((rows >= off_ref[g]) & (rows < off_ref[g + 1])
+            & (valid_ref[t] > 0))
+    x = jnp.where(live, x_ref[...].astype(jnp.float32), 0.0)
+    gout = g_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, gout, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    last = jnp.logical_or(t == L - 1, gid_ref[jnp.minimum(t + 1, L - 1)] != g)
+
+    @pl.when(last)
+    def _done():
+        o_ref[0] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret"),
+)
+def posit_grouped_gemm_dw(x: jnp.ndarray, g: jnp.ndarray,
+                          group_offsets: jnp.ndarray, *,
+                          bm: int = 128, bn: int = 512, bk: int = 512,
+                          interpret: bool = False) -> jnp.ndarray:
+    """x [S, k] x g [S, n], both expert-sorted -> dw [E, k, n] f32.
+
+    The grouped-GEMM weight gradient: dw[e] = x[rows(e)]^T @ g[rows(e)],
+    accumulated per group in f32 VMEM scratch over the same (group, m-tile)
+    incidence grid as the forward.  Only meaningful for float (QAT) expert
+    weights — posit storage ints carry no tangent, so the dispatcher never
+    calls this for them.
+    """
+    S, K = x.shape
+    S2, N = g.shape
+    assert S == S2, (x.shape, g.shape)
+    E = group_offsets.shape[0] - 1
+    bm_ = min(bm, _round_up(max(S, 1), 8))
+    bk_ = min(bk, max(8, K))
+    bn_ = min(bn, max(128, N))
+    Sp, Kp, Np = (_round_up(S, bm_), _round_up(K, bk_), _round_up(N, bn_))
+    if (Sp, Kp) != (S, K):
+        x = jnp.pad(x, ((0, Sp - S), (0, Kp - K)))
+    if (Sp, Np) != (S, N):
+        g = jnp.pad(g, ((0, Sp - S), (0, Np - N)))
+    nm, nk, nn = Sp // bm_, Kp // bk_, Np // bn_
+    L = nm + E - 1
+    mt, gid, valid = _group_metadata(group_offsets, nm, bm_, E)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(nk, nn, L),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_),
+                         lambda ki, ni, t, off, mt, gid, vl: (mt[t], ki)),
+            pl.BlockSpec((bm_, bn_),
+                         lambda ki, ni, t, off, mt, gid, vl: (mt[t], ni)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bk_, bn_),
+            lambda ki, ni, t, off, mt, gid, vl: (gid[t], ki, ni)),
+        scratch_shapes=[pltpu.VMEM((bk_, bn_), jnp.float32)],
+    )
+    dw = pl.pallas_call(
+        functools.partial(_grouped_dw_kernel, bm=bm_, L=L),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, Kp, Np), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(group_offsets.astype(jnp.int32), mt, gid, valid, x, g)[:, :K, :N]
+    # empty groups own no incidence: their blocks were never written
+    sizes = group_offsets[1:] - group_offsets[:-1]
+    return jnp.where(sizes[:, None, None] > 0, dw, 0.0)

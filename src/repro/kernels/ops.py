@@ -66,6 +66,33 @@ def force_reference() -> bool:
     return env is not None and env not in ("0", "false", "False")
 
 
+# Pin the jnp-reference *backwards* while the forwards keep their kernels
+# (REPRO_FORCE_BWD_REFERENCE=1 or ops.FORCE_BWD_REFERENCE): the baseline
+# leg of benchmarks/train_step.py, and the oracle leg of the grad-parity
+# tests — a forced backward is still counted in BWD_FALLBACKS.
+FORCE_BWD_REFERENCE = False
+
+
+def force_bwd_reference() -> bool:
+    if FORCE_BWD_REFERENCE:
+        return True
+    env = os.environ.get("REPRO_FORCE_BWD_REFERENCE")
+    return env is not None and env not in ("0", "false", "False")
+
+
+# Every backward that does NOT take a Pallas kernel is counted here, keyed
+# "<op>:forced" (a kernel was available but FORCE_* pinned the reference)
+# or "<op>:jnp-reference" (no Pallas backend) — the training analogue of
+# GATHER_FALLBACKS / DENSE_MOE_FALLBACKS / RECURRENT_FALLBACKS, asserted
+# zero by the shard_map train-step test and logged by training.trainer.
+BWD_FALLBACKS = collections.Counter()
+
+
+def _count_bwd_fallback(op: str) -> None:
+    BWD_FALLBACKS[f"{op}:" + ("forced" if use_pallas()
+                              else "jnp-reference")] += 1
+
+
 def _split(x, cfg: PositConfig | None):
     """(operand, explicit-cfg) -> (raw bits/array, cfg, was_posit_array)."""
     if isinstance(x, PositArray):
@@ -131,18 +158,84 @@ def gemm(a, b, *, cfg_a: PositConfig | None = None,
                 f"mixed-format gemm ({cfg_a} @ {cfg_b}) with out_posit needs "
                 f"an explicit cfg_out")
         cfg_out = cfg_a if cfg_a is not None else cfg_b
-    if use_pallas():
-        out = _gemm.posit_gemm(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
-                               cfg_out=cfg_out, out_posit=out_posit,
-                               transpose_b=transpose_b,
-                               interpret=pallas_interpret())
-    else:
-        out = _ref.posit_gemm_ref(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
-                                  cfg_out=cfg_out, out_posit=out_posit,
-                                  transpose_b=transpose_b)
-    if out_posit and (a_posit or b_posit):
-        return PositArray(out, cfg_out)
-    return out
+    if out_posit:
+        # posit bits out: no tangent through the rounding — direct dispatch
+        if use_pallas():
+            out = _gemm.posit_gemm(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
+                                   cfg_out=cfg_out, out_posit=True,
+                                   transpose_b=transpose_b,
+                                   interpret=pallas_interpret())
+        else:
+            out = _ref.posit_gemm_ref(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
+                                      cfg_out=cfg_out, out_posit=True,
+                                      transpose_b=transpose_b)
+        if a_posit or b_posit:
+            return PositArray(out, cfg_out)
+        return out
+    static = (cfg_a, cfg_b, transpose_b, use_pallas(), pallas_interpret())
+    return _gemm_mm(static, a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gemm_mm(static, a, b):
+    cfg_a, cfg_b, transpose_b, use_kernel, interpret = static
+    if use_kernel:
+        return _gemm.posit_gemm(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
+                                transpose_b=transpose_b, interpret=interpret)
+    return _ref.posit_gemm_ref(a, b, cfg_a=cfg_a, cfg_b=cfg_b,
+                               transpose_b=transpose_b)
+
+
+def _gemm_mm_fwd(static, a, b):
+    return _gemm_mm(static, a, b), (a, b)
+
+
+def _gemm_mm_bwd(static, res, g):
+    """dA = G @ B^T and dB = A^T @ G through the same posit_gemm kernel the
+    forward used: posit operands stream at storage width and decode in VMEM
+    (transpose_a/transpose_b index the stored tiles, so no transposed copy
+    exists), with f32 quire-style accumulation.  Posit operands carry no
+    tangent — training crosses the posit boundary through the STE.  Off the
+    kernel path the jnp reference runs and the miss is counted."""
+    cfg_a, cfg_b, transpose_b, use_kernel, interpret = static
+    a, b = res
+    g = g.astype(jnp.float32)
+    if use_kernel and not force_bwd_reference():
+        if cfg_a is not None:
+            da = None
+        else:
+            # forward b layout: [k,n] (or [n,k] when transpose_b) — dA
+            # contracts g with the *other* storage axis
+            da = _gemm.posit_gemm(g, b, cfg_a=None, cfg_b=cfg_b,
+                                  transpose_b=not transpose_b,
+                                  interpret=interpret).astype(a.dtype)
+        if cfg_b is not None:
+            db = None
+        elif transpose_b:
+            db = _gemm.posit_gemm(g, a, cfg_a=None, cfg_b=cfg_a,
+                                  transpose_a=True,
+                                  interpret=interpret).astype(b.dtype)
+        else:
+            db = _gemm.posit_gemm(a, g, cfg_a=cfg_a, cfg_b=None,
+                                  transpose_a=True,
+                                  interpret=interpret).astype(b.dtype)
+        return da, db
+    _count_bwd_fallback("gemm")
+    from repro.core.decode import decode_to_f32
+    af = (decode_to_f32(a, cfg_a) if cfg_a is not None
+          else a.astype(jnp.float32))
+    bf = (decode_to_f32(b, cfg_b) if cfg_b is not None
+          else b.astype(jnp.float32))
+    da = None
+    if cfg_a is None:
+        da = (g @ bf if transpose_b else g @ bf.T).astype(a.dtype)
+    db = None
+    if cfg_b is None:
+        db = (g.T @ af if transpose_b else af.T @ g).astype(b.dtype)
+    return da, db
+
+
+_gemm_mm.defvjp(_gemm_mm_fwd, _gemm_mm_bwd)
 
 
 def pw_matmul(x, w, cfg: PositConfig | None = None, *,
@@ -178,33 +271,41 @@ def _grouped_mm_fwd(static, x, w, group_offsets):
 
 
 def _grouped_mm_bwd(static, res, g):
-    """jnp-reference backward (flash-attention style: the kernel owns the
-    forward, the reference owns gradient truth).  dx contracts each row
-    against its own group's transposed weight — through the grouped kernel
-    when the forward used it, so no [S, k, n] per-row weight gather ever
-    materializes; dw segment-contracts the rows back onto the group axis
-    via a one-hot three-operand einsum (XLA picks an O(S*E*max(k,n))
-    contraction, never the [S, k, n] outer-product tensor).  Integer
-    operands (posit weight bits, the offsets) carry no tangents.  This is
-    a *reference* backward, sized for QAT probes — production-scale MoE
-    training keeps the one-hot dispatch path entirely (models/moe.py) and
-    a transposed grouped kernel remains future work."""
+    """Backward dispatch: the grouped Pallas kernels when the forward fused,
+    the jnp reference (counted in BWD_FALLBACKS) otherwise.
+
+    Kernel leg: dx = g @ w[gid]^T runs `posit_grouped_gemm(transpose_b=
+    True)` over the *same* [E, k, n] storage layout — posit experts stream
+    at posit width and decode in VMEM in the backward too, replacing the
+    full `decode_to_f32(w)` this path used to materialize; dw accumulates
+    each group's x^T g in f32 VMEM scratch (`posit_grouped_gemm_dw`, the
+    per-group quire).  Reference leg: per-row weight gather + one-hot
+    three-operand einsum (XLA picks an O(S*E*max(k,n)) contraction, never
+    the [S, k, n] outer-product tensor).  Integer operands (posit weight
+    bits, the offsets) carry no tangents — training crosses the posit
+    boundary through the STE."""
     cfg, use_kernel, interpret = static
     x, w, off = res
+    gid, inb = _ref.grouped_row_ids(off, x.shape[0])
+    g = jnp.where(inb[:, None], g.astype(jnp.float32), 0.0)
+    if use_kernel and not force_bwd_reference():
+        dx = _ggemm.posit_grouped_gemm(g, w, off, cfg_b=cfg,
+                                       transpose_b=True,
+                                       interpret=interpret).astype(x.dtype)
+        if cfg is not None:
+            return dx, None, None
+        dw = _ggemm.posit_grouped_gemm_dw(
+            x.astype(jnp.float32), g, off,
+            interpret=interpret).astype(w.dtype)
+        return dx, dw, None
+    _count_bwd_fallback("grouped")
     if cfg is not None:
         from repro.core.decode import decode_to_f32
         wf = decode_to_f32(w, cfg)
     else:
         wf = w.astype(jnp.float32)
-    gid, inb = _ref.grouped_row_ids(off, x.shape[0])
-    g = jnp.where(inb[:, None], g.astype(jnp.float32), 0.0)
-    if use_kernel:
-        dx = _ggemm.posit_grouped_gemm(g, wf.transpose(0, 2, 1), off,
-                                       cfg_b=None, interpret=interpret)
-    else:
-        dx = jnp.einsum("sn,skn->sk", g, wf[gid],
-                        preferred_element_type=jnp.float32)
-    dx = dx.astype(x.dtype)
+    dx = jnp.einsum("sn,skn->sk", g, wf[gid],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
     if cfg is not None:
         return dx, None, None
     oh = jnp.where(inb[:, None], jax.nn.one_hot(gid, w.shape[0]), 0.0)
@@ -226,10 +327,12 @@ def grouped_matmul(x, w, group_offsets, *, cfg: PositConfig | None = None,
     PositArray (preferred), raw storage ints + explicit `cfg`, or a float
     array (cfg None).  On the Pallas path the grouped kernel streams only
     the active groups' posit tiles and decodes them in VMEM; elsewhere the
-    dense jnp reference runs.  Differentiable via jax.custom_vjp: kernel
-    forward, jnp segment-sum reference backward (posit weight bits carry no
-    tangent — training crosses the posit boundary through the STE, exactly
-    as pw_matmul does).
+    dense jnp reference runs.  Differentiable via jax.custom_vjp: on the
+    kernel path both directions fuse (dx streams the storage-layout experts
+    via transpose_b, dw accumulates per group in f32 scratch); elsewhere
+    the jnp reference backward runs and is counted in BWD_FALLBACKS (posit
+    weight bits carry no tangent — training crosses the posit boundary
+    through the STE, exactly as pw_matmul does).
     """
     w, cfg, _ = _split(w, cfg)
     dt = getattr(w, "dtype", None)
@@ -384,17 +487,62 @@ def rglru_scan(a, b, h0, *, num_new=None,
 def flash_prefill(q, k, v, kv_len, q_offset, *,
                   cfg_kv: PositConfig | None = None, causal: bool = True,
                   window: int | None = None, softcap: float | None = None,
-                  interpret: bool | None = None):
+                  return_lse: bool = False, interpret: bool | None = None):
     """Fused prefill over a contiguous KV cache (GQA layout).
 
     q [B, H, Sq, D] x k/v [B, n_kv, Skv, D]; kv_len/q_offset [B] int32.
     The TPU dispatch target of models.blocks.blockwise_attention (training
     forward and the dense engine's prefill), which remains the bit-parity
     reference; the dense cache streams tile-by-tile at storage width.
+    return_lse: also return the row log-sum-exps — the residual the
+    training backward (flash_prefill_bwd) consumes.
     """
     k, v, cfg_kv = unwrap_kv(k, v, cfg_kv, q=q)
     if interpret is None:
         interpret = pallas_interpret()
     return _fa.flash_prefill_contiguous(
         q, k, v, kv_len, q_offset, cfg_kv=cfg_kv, causal=causal,
-        window=window, softcap=softcap, interpret=interpret)
+        window=window, softcap=softcap, return_lse=return_lse,
+        interpret=interpret)
+
+
+def flash_prefill_bwd(q, k, v, o, lse, g, kv_len, q_offset, *, n_kv: int,
+                      cfg_kv: PositConfig | None = None, causal: bool = True,
+                      window: int | None = None, softcap: float | None = None,
+                      interpret: bool | None = None):
+    """(dQ, dK, dV) for the fused contiguous prefill.
+
+    Kernel path: the flash backward kernels (dQ sweeps kv tiles, dK/dV
+    sweep q tiles, scores rebuilt from the saved lse — no [Sq, Skv] matrix,
+    posit KV decoded in VMEM).  Otherwise the jnp blockwise oracle is
+    differentiated and the miss is counted in BWD_FALLBACKS.  Posit KV
+    (cfg_kv set) returns dK = dV = None on both legs — storage ints carry
+    no tangent.
+    """
+    if interpret is None:
+        interpret = pallas_interpret()
+    if use_pallas() and not force_reference() and not force_bwd_reference():
+        dq, dk, dv = _fa.flash_prefill_bwd_contiguous(
+            q, k, v, o, lse, g, kv_len, q_offset, cfg_kv=cfg_kv,
+            causal=causal, window=window, softcap=softcap,
+            interpret=interpret)
+        dq = dq.astype(q.dtype)
+        if dk is not None:
+            dk, dv = dk.astype(k.dtype), dv.astype(v.dtype)
+        return dq, dk, dv
+    _count_bwd_fallback("flash")
+    from repro.models.blocks import _blockwise_jnp
+
+    def ref(qq, kk, vv):
+        return _blockwise_jnp(qq, kk, vv, n_kv=n_kv, causal=causal,
+                              q_off=q_offset, window=window, q_chunk=512,
+                              kv_chunk=512, softcap=softcap, kv_len=kv_len,
+                              cfg_kv=cfg_kv)
+
+    if cfg_kv is not None:
+        out, vjp = jax.vjp(lambda qq: ref(qq, k, v), q)
+        (dq,) = vjp(g.astype(out.dtype))
+        return dq, None, None
+    out, vjp = jax.vjp(ref, q, k, v)
+    dq, dk, dv = vjp(g.astype(out.dtype))
+    return dq, dk, dv

@@ -40,7 +40,7 @@ def _pad_to(x: jnp.ndarray, m0: int, m1: int, value=0) -> jnp.ndarray:
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, cfg_a, cfg_b, nk, out_posit,
-                 cfg_out, transpose_b):
+                 cfg_out, transpose_a, transpose_b):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -56,14 +56,14 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, cfg_a, cfg_b, nk, out_posit,
     else:
         b = b.astype(jnp.float32)
 
-    if transpose_b:
-        # b tile is [bn, bk]: contract both operands on their last dim — the
-        # transposed layout never materializes, in VMEM or HBM
-        acc_ref[...] += jax.lax.dot_general(
-            a, b, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
-    else:
-        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    # transposed operands contract on their stored axis (a tile [bk, bm]:
+    # dim 0; b tile [bn, bk]: dim 1) — the transposed layout never
+    # materializes, in VMEM or HBM
+    ca = 0 if transpose_a else 1
+    cb = 1 if transpose_b else 0
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((ca,), (cb,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _done():
@@ -82,19 +82,22 @@ _GEMM_SEMANTICS = ("parallel", "parallel", "arbitrary")
 @functools.partial(
     jax.jit,
     static_argnames=("cfg_a", "cfg_b", "cfg_out", "out_posit", "bm", "bn",
-                     "bk", "transpose_b", "interpret"),
+                     "bk", "transpose_a", "transpose_b", "interpret"),
 )
 def posit_gemm(a: jnp.ndarray, b: jnp.ndarray, *,
                cfg_a: PositConfig | None, cfg_b: PositConfig | None,
                cfg_out: PositConfig | None = None, out_posit: bool = False,
                bm: int = 512, bn: int = 512, bk: int = 512,
-               transpose_b: bool = False,
+               transpose_a: bool = False, transpose_b: bool = False,
                interpret: bool = False) -> jnp.ndarray:
-    """[m,k] @ [k,n] (or [m,k] @ [n,k].T when transpose_b) with posit
-    operands decoded in-kernel.
+    """[m,k] @ [k,n] (or [m,k] @ [n,k].T when transpose_b, or
+    [k,m].T @ [k,n] when transpose_a) with posit operands decoded in-kernel.
 
     cfg_a/cfg_b None means that operand is already float.  Output is f32
     (quire-accumulated) or posit bits when out_posit (single final rounding).
+    transpose_a is the dW leg of the training backward (dW = A^T @ G): the
+    stored activation tile contracts on its leading dim, so no XLA
+    transpose of the [m, k] operand ever materializes.
     Block shapes: MXU-aligned multiples of 128.  Roofline defaults: HBM
     traffic is m*k*(n/bn) + k*n*(m/bm) operand bytes, so square 512-blocks
     halve the re-read term vs the old 256x256 while the f32 working set
@@ -103,16 +106,20 @@ def posit_gemm(a: jnp.ndarray, b: jnp.ndarray, *,
     amortizes its fetch over >= 512 MACs/element — past the MXU ridge even
     at posit8 (1 byte/elem) width.
     """
-    m, k = a.shape
+    if transpose_a:
+        k, m = a.shape
+    else:
+        m, k = a.shape
     if transpose_b:
         n, k2 = b.shape
     else:
         k2, n = b.shape
-    assert k == k2, (a.shape, b.shape, transpose_b)
+    assert k == k2, (a.shape, b.shape, transpose_a, transpose_b)
     bm_ = min(bm, max(8, m)); bn_ = min(bn, max(128, n)); bk_ = min(bk, k)
-    a = _pad_to(a, bm_, bk_)
+    a = _pad_to(a, bk_, bm_) if transpose_a else _pad_to(a, bm_, bk_)
     b = _pad_to(b, bn_, bk_) if transpose_b else _pad_to(b, bk_, bn_)
-    mp, kp = a.shape
+    mp = a.shape[1] if transpose_a else a.shape[0]
+    kp = a.shape[0] if transpose_a else a.shape[1]
     np_ = b.shape[0] if transpose_b else b.shape[1]
     grid = (mp // bm_, np_ // bn_, kp // bk_)
 
@@ -121,6 +128,10 @@ def posit_gemm(a: jnp.ndarray, b: jnp.ndarray, *,
     else:
         out_dtype = jnp.float32
 
+    if transpose_a:
+        a_spec = pl.BlockSpec((bk_, bm_), lambda i, j, kk: (kk, i))
+    else:
+        a_spec = pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk))
     if transpose_b:
         b_spec = pl.BlockSpec((bn_, bk_), lambda i, j, kk: (j, kk))
     else:
@@ -128,10 +139,10 @@ def posit_gemm(a: jnp.ndarray, b: jnp.ndarray, *,
     out = pl.pallas_call(
         functools.partial(_gemm_kernel, cfg_a=cfg_a, cfg_b=cfg_b, nk=grid[2],
                           out_posit=out_posit, cfg_out=cfg_out,
-                          transpose_b=transpose_b),
+                          transpose_a=transpose_a, transpose_b=transpose_b),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            a_spec,
             b_spec,
         ],
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),

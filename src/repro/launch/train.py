@@ -45,10 +45,26 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config (CPU-sized)")
     ap.add_argument("--posit", choices=["off", "p8", "p16"], default="p16")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel mesh axis (1 = single device)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel mesh axis (attention/MLP stacks)")
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N CPU host devices (sets XLA_FLAGS; must "
+                         "run before jax initializes)")
     ap.add_argument("--restart-on-failure", action="store_true")
     ap.add_argument("--max-restarts", type=int, default=10)
     ap.add_argument("--step-timeout", type=float, default=None)
     args = ap.parse_args()
+
+    if args.host_devices:
+        # append (not prepend): XLA applies the *last* duplicate flag, so an
+        # inherited force_host_platform_device_count must not win over the
+        # explicit request
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.host_devices}")
 
     if os.environ.get("JAX_PLATFORMS", "") not in ("", "cpu"):
         os.environ["XLA_FLAGS"] = (TPU_XLA_FLAGS + " "
@@ -75,11 +91,19 @@ def main():
     rp = RestartPolicy(ckpt_every=args.ckpt_every,
                        step_timeout_s=args.step_timeout)
 
+    mesh = None
+    if args.dp > 1 or args.tp > 1:
+        # same builder as sharded serving: whatever jax.devices() offers (a
+        # TPU slice, or XLA_FLAGS=--xla_force_host_platform_device_count=N)
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(data=args.dp, model=args.tp)
+
     attempts = 0
     while True:
         try:
             train_loop(cfg, opt_cfg, data_cfg, args.steps,
-                       ckpt_dir=args.ckpt_dir, policy=rp)
+                       ckpt_dir=args.ckpt_dir, policy=rp, mesh=mesh,
+                       accum_steps=args.accum_steps)
             break
         except KeyboardInterrupt:
             raise

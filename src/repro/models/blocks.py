@@ -91,8 +91,17 @@ def linear(x, p: Params, policy: PositPolicy | None = None):
     else:
         if policy is not None and policy.weights is not None:
             w = posit_cast_ste(w, policy.weights)
-        y = jnp.einsum("...i,io->...o", x, w,
-                       preferred_element_type=jnp.float32).astype(x.dtype)
+        from repro.kernels import ops as kops
+        if kops.use_pallas() and not kops.force_reference():
+            # training / float-weight kernel path: same posit_gemm kernel,
+            # differentiable end to end (gemm's custom_vjp runs the dX/dW
+            # kernels), so QAT training engages the MXU pipeline too
+            lead = x.shape[:-1]
+            y = kops.gemm(x.reshape(-1, x.shape[-1]), w)
+            y = y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+        else:
+            y = jnp.einsum("...i,io->...o", x, w,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -327,15 +336,16 @@ def _blockwise_jnp(q, k, v, *, n_kv: int, causal: bool, q_off, window,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _fused_prefill(static, q, k, v, kv_len, q_off):
-    """Fused prefill forward with the jnp blockwise scan as its VJP.
+    """Fused prefill forward with a kernel (or counted-oracle) VJP.
 
     static = (cfg_kv, n_kv, causal, window, softcap) — hashable, so one
     custom_vjp covers every arch.  The forward runs the Pallas kernel
-    (posit KV decodes in VMEM, no dense copy); the backward recomputes
-    through `_blockwise_jnp` and differentiates that — flash-attention
-    memory behaviour with the reference as the single source of gradient
-    truth.  Integer operands (posit KV bits, lengths/offsets) carry no
-    tangents and get None cotangents.
+    (posit KV decodes in VMEM, no dense copy); when differentiated it also
+    saves (o, lse) so the backward can rebuild the scores tile by tile —
+    `kernels.ops.flash_prefill_bwd` dispatches the flash dQ/dK/dV kernels,
+    falling back to differentiating `_blockwise_jnp` (counted in
+    `ops.BWD_FALLBACKS`) off the kernel path.  Integer operands (posit KV
+    bits, lengths/offsets) carry no tangents and get None cotangents.
     """
     cfg_kv, n_kv, causal, window, softcap = static
     from repro.kernels import ops as kops
@@ -344,27 +354,24 @@ def _fused_prefill(static, q, k, v, kv_len, q_off):
 
 
 def _fused_prefill_fwd(static, q, k, v, kv_len, q_off):
-    return _fused_prefill(static, q, k, v, kv_len, q_off), \
-        (q, k, v, kv_len, q_off)
+    cfg_kv, n_kv, causal, window, softcap = static
+    from repro.kernels import ops as kops
+    out, lse = kops.flash_prefill(q, k, v, kv_len, q_off, cfg_kv=cfg_kv,
+                                  causal=causal, window=window,
+                                  softcap=softcap, return_lse=True)
+    return out, (q, k, v, out, lse, kv_len, q_off)
 
 
 def _fused_prefill_bwd(static, res, g):
     cfg_kv, n_kv, causal, window, softcap = static
-    q, k, v, kv_len, q_off = res
-
-    def ref(qq, kk, vv):
-        return _blockwise_jnp(qq, kk, vv, n_kv=n_kv, causal=causal,
-                              q_off=q_off, window=window, q_chunk=512,
-                              kv_chunk=512, softcap=softcap, kv_len=kv_len,
-                              cfg_kv=cfg_kv)
-
+    q, k, v, o, lse, kv_len, q_off = res
+    from repro.kernels import ops as kops
+    dq, dk, dv = kops.flash_prefill_bwd(
+        q, k, v, o, lse, g, kv_len, q_off, n_kv=n_kv, cfg_kv=cfg_kv,
+        causal=causal, window=window, softcap=softcap)
     if jnp.issubdtype(k.dtype, jnp.floating):
-        out, vjp = jax.vjp(ref, q, k, v)
-        dq, dk, dv = vjp(g.astype(out.dtype))
         return dq, dk, dv, None, None
     # posit KV (serving): bits are integers, only q carries a tangent
-    out, vjp = jax.vjp(lambda qq: ref(qq, k, v), q)
-    (dq,) = vjp(g.astype(out.dtype))
     return dq, None, None, None, None
 
 
@@ -396,15 +403,19 @@ def attention_block(x, p: Params, *, n_heads: int, n_kv: int, head_dim: int,
     fused in the Pallas kernel on TPU) — the format rides with the pages, so
     nothing here re-states it.
     """
-    from repro.distributed.collectives import block_psum, tp_ctx
+    from repro.distributed.collectives import (block_grad_sync, block_psum,
+                                               tp_ctx)
     ctx = tp_ctx()
     if ctx is not None:
-        # Megatron TP (sharded serving step): wq/wk/wv are column-parallel,
-        # so this member computes its n_heads/ntp heads (and n_kv/ntp kv
-        # heads, whose pages live on the same member); wo is row-parallel
-        # and owes the block's one psum below.
+        # Megatron TP (sharded serving or training step): wq/wk/wv are
+        # column-parallel, so this member computes its n_heads/ntp heads
+        # (and n_kv/ntp kv heads, whose pages live on the same member); wo
+        # is row-parallel and owes the block's one psum below.  The
+        # f-operator makes the block's d(input) whole again when training
+        # differentiates through the weight shards (identity forward).
         n_heads //= ctx.size
         n_kv //= ctx.size
+        x = block_grad_sync(x)
     B, S, _ = x.shape
     q = linear(x, p["wq"], policy).reshape(B, S, n_heads, head_dim)
     k = linear(x, p["wk"], policy).reshape(B, S, n_kv, head_dim)
@@ -466,6 +477,10 @@ def init_mlp(key, d_model: int, d_ff: int, act: str) -> Params:
 
 
 def mlp_block(x, p: Params, *, act: str, policy: PositPolicy):
+    # f-operator (identity fwd / TP-psum bwd): w_up/w_gate shards each see
+    # only their d_ff slice, so d(x) comes back partial per member
+    from repro.distributed.collectives import block_grad_sync
+    x = block_grad_sync(x)
     up = linear(x, p["w_up"], policy)
     if act == "geglu":
         h = jax.nn.gelu(linear(x, p["w_gate"], policy)) * up
@@ -547,5 +562,12 @@ def unembed(h, p: Params, policy: PositPolicy):
         return kops.pw_matmul(h, t, cfg, transpose_b=True)
     if policy is not None and policy.weights is not None:
         t = posit_cast_ste(t, policy.weights)
+    from repro.kernels import ops as kops
+    if kops.use_pallas() and not kops.force_reference():
+        # float/QAT table on the kernel path: same transpose_b stream, and
+        # gemm's custom_vjp gives the dH/dTable kernels for training
+        lead = h.shape[:-1]
+        out = kops.gemm(h.reshape(-1, h.shape[-1]), t, transpose_b=True)
+        return out.reshape(*lead, t.shape[0])
     return jnp.einsum("...d,vd->...v", h, t,
                       preferred_element_type=jnp.float32)

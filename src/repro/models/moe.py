@@ -22,13 +22,14 @@ expert-parallel TP): top-k over the router softmax, per-dispatch-group
 arrival-order capacity positions, overflow drops, and combine weights
 renormalized over the *kept* experts only — a token whose sibling expert
 overflowed redistributes its mix instead of keeping a stale under-weighted
-sum.  The one-hot implementation survives as the CPU/interpret oracle,
-the benchmark baseline, *and the training path*: under GSPMD training its
-einsums partition cleanly with experts on the model mesh axis, which a
-pallas_call cannot (no GSPMD partitioning rules — the grouped kernel in a
-jitted training step would gather the full sharded expert tensors onto
-every device).  DENSE_MOE_FALLBACKS counts the one-hot path's full-expert
-decodes, and the tier-1 engine drain asserts serving never adds one.
+sum.  The one-hot implementation survives as the CPU/interpret oracle and
+the benchmark baseline.  Training uses the grouped path too: the grouped
+custom_vjp supplies dX/dW Pallas kernels, and the shard_map train step
+(training/train_step.py) makes partitioning manual, so the old GSPMD
+carve-out (one-hot einsums for training) is gone.  DENSE_MOE_FALLBACKS
+counts every dense dispatch plus the one-hot path's full-expert posit
+decodes; tier-1 asserts neither an engine drain nor a kernel-path train
+step adds one.
 
 Under a `tensor_parallel` context (the mesh-sharded serving step) experts
 are split over the model axis: routing is computed globally on every
@@ -304,15 +305,26 @@ def moe_block(x, p: Params, *, n_experts: int, top_k: int, act: str,
     which other requests share its step (and bit-parity across data-shard
     layouts would be impossible).
 
-    Dispatch: serving steps on the Pallas path (use_pallas() and
-    capacity_factor None — TPU, or the interpret-mode tier-1 drive) take
-    sort-based routing + the grouped posit GEMM; training and the jnp
-    backend keep the GShard one-hot implementation (which is also the
-    oracle).  REPRO_FORCE_GATHER / ops.FORCE_REFERENCE / FORCE_DENSE pin
-    the one-hot path everywhere (benchmark baseline); FORCE_GROUPED pins
-    the grouped routing regardless of backend or capacity.
+    Dispatch: the Pallas path (use_pallas() — TPU, or the interpret-mode
+    tier-1 drive) takes sort-based routing + the grouped posit GEMM for
+    serving AND training (the grouped custom_vjp supplies the dX/dW
+    kernels, and the training step runs under shard_map where partitioning
+    is manual, so the old GSPMD carve-out is gone); the jnp backend keeps
+    the GShard one-hot implementation (which is also the oracle).
+    REPRO_FORCE_GATHER / ops.FORCE_REFERENCE / FORCE_DENSE pin the one-hot
+    path everywhere (benchmark baseline); FORCE_GROUPED pins the grouped
+    routing regardless of backend.  With capacity drops (training) the
+    grouped dispatch is output-identical to one-hot: comb_w zeroes dropped
+    (token, k) pairs before either path combines.
     """
     from repro.kernels import ops as kops
+    from repro.distributed.collectives import block_grad_sync
+    # f-operator under expert-parallel TP: shard-local expert paths give a
+    # partial d(x) per member (identity fwd; see collectives).  Router
+    # weight grads stay partial-per-shard though, so the training step
+    # rejects MoE with ntp > 1 — this keeps d(x) correct for serving-style
+    # grad probes and future EP training.
+    x = block_grad_sync(x)
     B, S, d = x.shape
     T = B * S
     gs = min(group_size, T)
@@ -335,26 +347,28 @@ def moe_block(x, p: Params, *, n_experts: int, top_k: int, act: str,
     pm = probs.mean(axis=(0, 1))
     aux = n_experts * jnp.sum(f * pm)
 
-    # Grouped dispatch is the *serving* hot path (capacity_factor None is
-    # the serving marker — transformer passes it whenever a cache is
-    # present).  GSPMD training keeps the one-hot einsums deliberately:
-    # pallas_call carries no GSPMD partitioning rules, so the grouped
-    # kernel inside a jitted training step would gather the full
-    # (expert-sharded / FSDP-sharded) [E, d, f] tensors onto every device
-    # — the einsum dispatch partitions cleanly with experts on the model
-    # axis instead.  Sharded serving is safe: the step runs under
-    # shard_map, where partitioning is manual and shard-local.
+    # Grouped dispatch is the hot path for serving AND training on the
+    # Pallas backend.  Both sharded steps (serving engine, train step) run
+    # under shard_map where partitioning is manual and shard-local, so
+    # pallas_call's lack of GSPMD rules no longer forces a training
+    # carve-out — the grouped custom_vjp's dX/dW kernels carry the
+    # backward.  With capacity drops the result is identical to one-hot
+    # (comb_w is already zero for dropped pairs).
     # FORCE_DENSE / REPRO_FORCE_GATHER / ops.FORCE_REFERENCE always win
     # (the documented pin-the-oracle-everywhere contract), even over a
     # stale FORCE_GROUPED left set by an earlier in-process experiment
-    grouped = ((FORCE_GROUPED
-                or (kops.use_pallas() and capacity_factor is None))
+    grouped = ((FORCE_GROUPED or kops.use_pallas())
                and not kops.force_reference() and not FORCE_DENSE)
     if grouped:
         out = _dispatch_grouped(xt, p, n_experts=n_experts, top_k=top_k,
                                 act=act, policy=policy, gate_idx=gate_idx,
                                 comb_w=comb_w)
     else:
+        # counted even for float weights: a zero-delta assertion on this
+        # counter is the "the kernel path actually engaged" check for
+        # training steps (posit materializations add "expert-decode" too)
+        DENSE_MOE_FALLBACKS[
+            "forced" if kops.use_pallas() else "jnp-reference"] += 1
         out = _dispatch_oneshot(xt, p, n_experts=n_experts, top_k=top_k,
                                 act=act, policy=policy, cap=cap,
                                 gate_idx=gate_idx, pos=pos, keep=keep,

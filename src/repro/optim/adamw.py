@@ -52,10 +52,16 @@ def global_norm(tree):
                         for x in jax.tree_util.tree_leaves(tree)))
 
 
-def apply_updates(params, grads, state, cfg: OptConfig):
-    """Returns (new_params, new_state, metrics)."""
+def apply_updates(params, grads, state, cfg: OptConfig, grad_norm=None):
+    """Returns (new_params, new_state, metrics).
+
+    grad_norm: precomputed global gradient norm.  The shard_map training
+    step passes the mesh-correct norm (model-sharded leaves psum their
+    squared sums; a local global_norm would double-count replicated leaves
+    or miss TP shards); single-device callers leave it None.
+    """
     step = state["step"] + 1
-    gn = global_norm(grads)
+    gn = global_norm(grads) if grad_norm is None else grad_norm
     scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
     lr = lr_at(step, cfg)
     mdt = jnp.dtype(cfg.moment_dtype)

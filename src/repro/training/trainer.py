@@ -1,7 +1,18 @@
 """Training loop with checkpoint/restart fault tolerance.
 
 Single-host CPU runs drive the examples and tests; launch/train.py wraps the
-same loop in a mesh with sharded params (the pjit path the dry-run proves).
+same loop in a mesh with sharded params.  The step itself comes from
+training.train_step.make_train_step — plain donated jit on one device, a
+shard_map over the ("data","model") mesh otherwise, so the Pallas training
+kernels engage identically in both.
+
+Each log interval also records the kernel-dispatch health counters —
+deltas of BWD_FALLBACKS (kernels.ops), DENSE_MOE_FALLBACKS (models.moe)
+and GATHER_FALLBACKS (serving.paged_kv) since the previous log line — and
+steps/sec.  On the Pallas path all three deltas staying zero is the "the
+training step is actually running on the kernels" invariant the tier-1
+suite asserts; a nonzero delta in a log line is the first sign a config
+silently fell back to the jnp oracles.
 """
 from __future__ import annotations
 
@@ -15,15 +26,41 @@ from repro.data.pipeline import DataConfig, global_batch_at
 from repro.distributed.fault_tolerance import RestartPolicy, StepWatchdog
 from repro.models.transformer import ModelConfig, init_params
 from repro.optim import adamw
-from repro.training.train_step import train_step
+from repro.training.train_step import make_train_step
+
+
+def _fallback_counters():
+    """Snapshot of every kernel-fallback counter, one flat dict."""
+    from repro.kernels import ops as kops
+    from repro.models import moe
+    from repro.serving import paged_kv
+    out = {}
+    for name, ctr in (("bwd", kops.BWD_FALLBACKS),
+                      ("moe", moe.DENSE_MOE_FALLBACKS),
+                      ("gather", paged_kv.GATHER_FALLBACKS)):
+        for k, v in ctr.items():
+            out[f"{name}:{k}"] = int(v)
+    return out
+
+
+def _counter_delta(before, after):
+    return {k: v - before.get(k, 0) for k, v in after.items()
+            if v - before.get(k, 0)}
 
 
 def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
                data_cfg: DataConfig, num_steps: int,
                ckpt_dir: str | None = None,
                policy: RestartPolicy = RestartPolicy(),
-               log_every: int = 10, seed: int = 0, verbose: bool = True):
-    """Runs (or resumes) training; returns the metrics history."""
+               log_every: int = 10, seed: int = 0, verbose: bool = True,
+               mesh=None, accum_steps: int = 1):
+    """Runs (or resumes) training; returns the metrics history.
+
+    mesh: a ("data","model") jax Mesh routes every step through the
+    shard_map training path (params/opt-state/batch device_put to their
+    PartitionSpecs up front so the donated jit re-uses the buffers in
+    place); None keeps the single-device donated jit.
+    """
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt_state = adamw.init_state(params, opt_cfg)
     start_step = 0
@@ -37,11 +74,19 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
             if verbose:
                 print(f"[trainer] resumed from step {step}")
 
-    step_fn = jax.jit(
-        lambda p, o, b: train_step(p, o, b, cfg, opt_cfg))
+    step_fn = make_train_step(cfg, opt_cfg, mesh, accum_steps=accum_steps)
+    if mesh is not None:
+        from repro.distributed import sharding
+        pspecs = sharding.train_param_pspecs(params, mesh)
+        params = jax.device_put(params, sharding.to_shardings(pspecs, mesh))
+        opt_state = jax.device_put(
+            opt_state, sharding.to_shardings(
+                sharding.opt_state_pspecs(opt_state, pspecs, mesh), mesh))
 
     history = []
     t0 = time.time()
+    t_log, s_log = t0, start_step
+    ctr_log = _fallback_counters()
     for step in range(start_step, num_steps):
         batch = global_batch_at(step, data_cfg)
         with StepWatchdog(policy.step_timeout_s):
@@ -49,11 +94,20 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
         if step % log_every == 0 or step == num_steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step
-            m["wall_s"] = time.time() - t0
+            now = time.time()
+            m["wall_s"] = now - t0
+            # block on the metrics (already floats above) so steps/sec
+            # measures completed device work, not dispatch latency
+            m["steps_per_s"] = (step + 1 - s_log) / max(now - t_log, 1e-9)
+            ctr = _fallback_counters()
+            m["fallbacks"] = _counter_delta(ctr_log, ctr)
+            t_log, s_log, ctr_log = now, step + 1, ctr
             history.append(m)
             if verbose:
+                fb = f" fallbacks {m['fallbacks']}" if m["fallbacks"] else ""
                 print(f"[trainer] step {step:5d} loss {m['loss']:.4f} "
-                      f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}")
+                      f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "
+                      f"{m['steps_per_s']:.2f} steps/s{fb}")
         if ckpt_dir and (step + 1) % policy.ckpt_every == 0:
             store.save(ckpt_dir, step + 1,
                        {"params": params, "opt": opt_state},

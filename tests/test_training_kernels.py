@@ -1,0 +1,402 @@
+"""Training on the Pallas kernels: backward-kernel grad parity, the
+donated train step, and the shard_map training acceptance row.
+
+Tier-1 scope (interpret mode on CPU):
+  * flash prefill dQ/dK/dV vs the jnp reference VJP across mask configs
+    (causal / sliding window / softcap) and KV formats (float, p8, p16)
+  * grouped-GEMM dX/dW vs the einsum oracle on ragged / empty /
+    tile-straddling groups
+  * posit_gemm custom_vjp (plain, transpose_b, posit operand)
+  * zero-BWD_FALLBACKS invariant of the kernel-path train step + buffer
+    donation aliasing
+  * the ISSUE-8 acceptance row: a forced 4-device host runs the shard_map
+    train step with zero BWD_FALLBACKS and zero DENSE_MOE_FALLBACKS (DP
+    MoE), and (2,2) DP x TP matches the single-device step (subprocess,
+    like test_serving_sharded).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.convert import f32_to_posit
+from repro.core.decode import decode_to_f32
+from repro.core.types import P8_2, P16_2
+from repro.kernels import ops as kops
+from repro.models import blocks
+from repro.models import moe as MOE
+from repro.models.transformer import ModelConfig, init_params
+from repro.optim.adamw import OptConfig, init_state
+from repro.quant.policy import PositPolicy
+from repro.training.train_step import make_train_step
+
+
+def _pallas_interpret_env(monkeypatch):
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    monkeypatch.delenv("REPRO_FORCE_GATHER", raising=False)
+    monkeypatch.delenv("REPRO_FORCE_BWD_REFERENCE", raising=False)
+
+
+# --------------------------------------------------------------------------
+# flash prefill backward vs the jnp reference VJP
+# --------------------------------------------------------------------------
+def _flash_grads(posit_cfg, causal, window, softcap):
+    """(kernel_grads, reference_grads, grad_names) through _fused_prefill —
+    the same custom_vjp training differentiates."""
+    rng = np.random.default_rng(3)
+    B, H, NKV, Sq, Skv, D = 2, 4, 2, 40, 72, 16
+    q = jnp.asarray(rng.standard_normal((B, H, Sq, D)) * 0.5, jnp.float32)
+    kf = jnp.asarray(rng.standard_normal((B, NKV, Skv, D)) * 0.5, jnp.float32)
+    vf = jnp.asarray(rng.standard_normal((B, NKV, Skv, D)) * 0.5, jnp.float32)
+    g = jnp.asarray(rng.standard_normal((B, H, Sq, D)), jnp.float32)
+    kv_len = jnp.asarray([Skv, Skv - 9], jnp.int32)   # ragged valid lengths
+    q_off = kv_len - Sq
+    if posit_cfg is not None:
+        k, v = f32_to_posit(kf, posit_cfg), f32_to_posit(vf, posit_cfg)
+        argnums = (0,)          # posit KV: quantized, not differentiable
+        names = ["dq"]
+    else:
+        k, v = kf, vf
+        argnums = (0, 1, 2)
+        names = ["dq", "dk", "dv"]
+
+    static = (posit_cfg, NKV, causal, window, softcap)
+
+    def loss(q, k, v):
+        out = blocks._fused_prefill(static, q, k, v, kv_len, q_off)
+        return (out * g).sum()
+
+    kops.BWD_FALLBACKS.clear()
+    got = jax.grad(loss, argnums=argnums)(q, k, v)
+    assert not dict(kops.BWD_FALLBACKS), dict(kops.BWD_FALLBACKS)
+
+    kops.FORCE_BWD_REFERENCE = True
+    try:
+        ref = jax.grad(loss, argnums=argnums)(q, k, v)
+    finally:
+        kops.FORCE_BWD_REFERENCE = False
+    assert kops.BWD_FALLBACKS["flash:forced"] > 0
+    kops.BWD_FALLBACKS.clear()
+    return got, ref, names
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None),
+    (True, 48, None),
+    (False, None, 8.0),
+    (True, 32, 10.0),
+], ids=["causal", "window", "softcap", "all"])
+def test_flash_bwd_float_matches_reference(monkeypatch, causal, window,
+                                           softcap):
+    _pallas_interpret_env(monkeypatch)
+    got, ref, names = _flash_grads(None, causal, window, softcap)
+    for n, a, b in zip(names, got, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                                   atol=2e-5, err_msg=n)
+
+
+@pytest.mark.parametrize("pcfg", [P16_2, P8_2], ids=["p16", "p8"])
+def test_flash_bwd_posit_kv_matches_reference(monkeypatch, pcfg):
+    """Posit KV: dq only (the cache is quantized storage); the kernel
+    decodes k/v tiles in VMEM exactly like the reference decodes chunks."""
+    _pallas_interpret_env(monkeypatch)
+    got, ref, names = _flash_grads(pcfg, True, 24, 6.0)
+    for n, a, b in zip(names, got, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                                   atol=2e-5, err_msg=n)
+
+
+# --------------------------------------------------------------------------
+# grouped-GEMM backward vs the einsum oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("sizes,tail", [
+    ([30, 0, 50, 16], 0),            # ragged + one empty group
+    ([5, 0, 0, 0, 19], 4),           # empty run + unowned tail rows
+    ([130, 7, 120, 3], 0),           # groups straddling the 128-row m-tile
+], ids=["ragged", "sparse-tail", "straddle"])
+def test_grouped_bwd_matches_einsum_oracle(monkeypatch, sizes, tail):
+    rng = np.random.default_rng(4)
+    E, K, N = len(sizes), 32, 40
+    S = int(sum(sizes)) + tail
+    off = jnp.asarray(np.concatenate([[0], np.cumsum(sizes)]), jnp.int32)
+    x = jnp.asarray(rng.standard_normal((S, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((E, K, N)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((S, N)), jnp.float32)
+
+    def loss(x, w):
+        return (kops.grouped_matmul(x, w, off) * g).sum()
+
+    _pallas_interpret_env(monkeypatch)
+    kops.BWD_FALLBACKS.clear()
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert not dict(kops.BWD_FALLBACKS), dict(kops.BWD_FALLBACKS)
+
+    gid = np.repeat(np.arange(E), sizes)
+    live = np.asarray(g)[:len(gid)]
+    dx_ref = np.zeros((S, K), np.float32)
+    dx_ref[:len(gid)] = np.einsum("sn,skn->sk", live, np.asarray(w)[gid])
+    oh = np.eye(E, dtype=np.float32)[gid]
+    dw_ref = np.einsum("se,sk,sn->ekn", oh, np.asarray(x)[:len(gid)], live)
+    np.testing.assert_allclose(np.asarray(dx), dx_ref, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(dw), dw_ref, rtol=2e-4, atol=2e-5)
+
+
+def test_grouped_bwd_posit_weights_dx_only(monkeypatch):
+    """Posit expert weights: dx streams the storage tiles via transpose_b;
+    no dw (quantized storage is not a differentiable leaf)."""
+    rng = np.random.default_rng(5)
+    sizes = [30, 0, 50, 16]
+    E, K, N = len(sizes), 32, 40
+    S = int(sum(sizes))
+    off = jnp.asarray(np.concatenate([[0], np.cumsum(sizes)]), jnp.int32)
+    x = jnp.asarray(rng.standard_normal((S, K)), jnp.float32)
+    w = f32_to_posit(
+        jnp.asarray(rng.standard_normal((E, K, N)), jnp.float32), P16_2)
+    g = jnp.asarray(rng.standard_normal((S, N)), jnp.float32)
+
+    def loss(x):
+        return (kops.grouped_matmul(x, w, off, cfg=P16_2) * g).sum()
+
+    _pallas_interpret_env(monkeypatch)
+    kops.BWD_FALLBACKS.clear()
+    dx = jax.grad(loss)(x)
+    assert not dict(kops.BWD_FALLBACKS), dict(kops.BWD_FALLBACKS)
+    gid = np.repeat(np.arange(E), sizes)
+    wf = np.asarray(decode_to_f32(w, P16_2))
+    dx_ref = np.einsum("sn,skn->sk", np.asarray(g), wf[gid])
+    np.testing.assert_allclose(np.asarray(dx), dx_ref, rtol=2e-4, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# posit_gemm custom_vjp (the linear/unembed training path)
+# --------------------------------------------------------------------------
+def test_gemm_vjp_matches_math(monkeypatch):
+    rng = np.random.default_rng(6)
+    m, k, n = 48, 64, 80
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    bt = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+
+    _pallas_interpret_env(monkeypatch)
+    kops.BWD_FALLBACKS.clear()
+    da, db = jax.grad(lambda a, b: (kops.gemm(a, b) * g).sum(),
+                      argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(g @ b.T),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(a.T @ g),
+                               rtol=2e-4, atol=2e-5)
+    # transpose_b (the tied-unembedding layout [vocab, d])
+    da, dbt = jax.grad(
+        lambda a, bt: (kops.gemm(a, bt, transpose_b=True) * g).sum(),
+        argnums=(0, 1))(a, bt)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(g @ bt),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(dbt), np.asarray(g.T @ a),
+                               rtol=2e-4, atol=2e-5)
+    # posit B operand: dA only, contracted against in-kernel decoded tiles
+    bb = f32_to_posit(b, P16_2)
+    da = jax.grad(lambda a: (kops.gemm(a, bb, cfg_b=P16_2) * g).sum())(a)
+    bf = np.asarray(decode_to_f32(bb, P16_2))
+    np.testing.assert_allclose(np.asarray(da), np.asarray(g) @ bf.T,
+                               rtol=2e-4, atol=2e-5)
+    assert not dict(kops.BWD_FALLBACKS), dict(kops.BWD_FALLBACKS)
+
+
+def test_forced_reference_bwd_counts(monkeypatch):
+    """REPRO_FORCE_BWD_REFERENCE pins the jnp backwards (the bench oracle
+    leg) and every op counts itself in BWD_FALLBACKS."""
+    rng = np.random.default_rng(7)
+    _pallas_interpret_env(monkeypatch)
+    monkeypatch.setenv("REPRO_FORCE_BWD_REFERENCE", "1")
+    a = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((24, 8)), jnp.float32)
+    kops.BWD_FALLBACKS.clear()
+    jax.grad(lambda a: kops.gemm(a, b).sum())(a)
+    assert kops.BWD_FALLBACKS["gemm:forced"] > 0
+    kops.BWD_FALLBACKS.clear()
+
+
+# --------------------------------------------------------------------------
+# the kernel-path train step: zero fallbacks + donation aliasing
+# --------------------------------------------------------------------------
+def test_train_step_kernel_path_zero_fallbacks(monkeypatch):
+    _pallas_interpret_env(monkeypatch)
+    cfg = ModelConfig("tk-zero-fb", n_layers=2, d_model=64, n_heads=4,
+                      n_kv=2, d_ff=128, vocab=256,
+                      policy=PositPolicy(weights=P16_2))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = OptConfig(lr_peak=1e-3, warmup_steps=2, total_steps=8)
+    opt = init_state(params, opt_cfg)
+    step = make_train_step(cfg, opt_cfg, donate=False)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 33),
+                                          0, cfg.vocab)}
+    kops.BWD_FALLBACKS.clear()
+    moe_before = dict(MOE.DENSE_MOE_FALLBACKS)
+    p2, o2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert not dict(kops.BWD_FALLBACKS), dict(kops.BWD_FALLBACKS)
+    assert dict(MOE.DENSE_MOE_FALLBACKS) == moe_before
+    # params actually moved
+    d0 = np.abs(np.asarray(p2["embed"]["table"])
+                - np.asarray(params["embed"]["table"])).max()
+    assert d0 > 0
+
+
+def test_train_step_donates_params_and_opt_state():
+    """donate_argnums=(0, 1): the step aliases the param/moment buffers in
+    place — the old leaves are deleted and (same shape/dtype/layout) the
+    new params reuse the donated memory."""
+    cfg = ModelConfig("tk-donate", n_layers=1, d_model=32, n_heads=2,
+                      n_kv=1, d_ff=64, vocab=128, policy=PositPolicy())
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = OptConfig(lr_peak=1e-3, warmup_steps=2, total_steps=8)
+    opt = init_state(params, opt_cfg)
+    params = jax.device_put(params)
+    opt = jax.device_put(opt)
+    table = params["embed"]["table"]
+    moment = opt["m"]["embed"]["table"]
+    ptr_t = table.unsafe_buffer_pointer()
+    ptr_m = moment.unsafe_buffer_pointer()
+
+    step = make_train_step(cfg, opt_cfg)     # donate=True default
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 17),
+                                          0, cfg.vocab)}
+    p2, o2, _ = step(params, opt, batch)
+    jax.block_until_ready((p2, o2))
+
+    # donated inputs are dead buffers now
+    with pytest.raises(RuntimeError):
+        np.asarray(table)
+    with pytest.raises(RuntimeError):
+        np.asarray(moment)
+    # and the outputs re-use the donated memory (same device pointers)
+    out_ptrs = {l.unsafe_buffer_pointer()
+                for l in jax.tree_util.tree_leaves((p2, o2))}
+    assert ptr_t in out_ptrs
+    assert ptr_m in out_ptrs
+
+
+def test_trainer_history_logs_fallbacks_and_throughput(tmp_path):
+    from repro.data.pipeline import DataConfig
+    from repro.training.trainer import train_loop
+    cfg = ModelConfig("tk-trainer-log", n_layers=1, d_model=32, n_heads=2,
+                      n_kv=1, d_ff=64, vocab=128, policy=PositPolicy())
+    opt_cfg = OptConfig(lr_peak=1e-3, warmup_steps=1, total_steps=3)
+    data = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=2)
+    _, _, hist = train_loop(cfg, opt_cfg, data, 3, log_every=1,
+                            verbose=False)
+    assert len(hist) == 3
+    for row in hist:
+        assert row["steps_per_s"] > 0
+        assert isinstance(row["fallbacks"], dict)
+
+
+def test_tp_training_rejects_moe():
+    """TP training is attention/MLP stacks only (router grads are partial
+    per shard); the builder must refuse rather than silently diverge."""
+    from repro.models.transformer import MoEConfig
+
+    class _FakeMesh:
+        shape = {"data": 2, "model": 2}
+
+    cfg = ModelConfig("tk-tp-moe", n_layers=2, d_model=64, n_heads=4,
+                      n_kv=2, d_ff=128, vocab=256,
+                      moe=MoEConfig(n_experts=4, top_k=2),
+                      policy=PositPolicy())
+    with pytest.raises(NotImplementedError):
+        make_train_step(cfg, OptConfig(), _FakeMesh())
+
+
+# --------------------------------------------------------------------------
+# the acceptance row: shard_map training on a forced 4-device host
+# --------------------------------------------------------------------------
+_SUBPROCESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["REPRO_USE_PALLAS"] = "1"
+    os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.types import P16_2
+    from repro.models.transformer import ModelConfig, MoEConfig, init_params
+    from repro.optim.adamw import OptConfig, init_state
+    from repro.quant.policy import PositPolicy
+    from repro.training.train_step import make_train_step
+    from repro.launch.mesh import make_serving_mesh
+    from repro.distributed import sharding
+    from repro.kernels import ops as kops
+    from repro.models import moe as MOE
+
+    def shard(params, opt, mesh):
+        pspecs = sharding.train_param_pspecs(params, mesh)
+        sp = jax.device_put(params, sharding.to_shardings(pspecs, mesh))
+        so = jax.device_put(opt, sharding.to_shardings(
+            sharding.opt_state_pspecs(opt, pspecs, mesh), mesh))
+        return sp, so
+
+    opt_cfg = OptConfig(lr_peak=1e-3, warmup_steps=2, total_steps=8)
+
+    # ---- (4, 1) data-parallel MoE: the zero-fallback acceptance row ----
+    cfg = ModelConfig("tk-sh4-moe", n_layers=2, d_model=64, n_heads=4,
+                      n_kv=2, d_ff=128, vocab=256,
+                      moe=MoEConfig(n_experts=4, top_k=2),
+                      policy=PositPolicy(weights=P16_2))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_state(params, opt_cfg)
+    mesh = make_serving_mesh(4, 1)
+    sp, so = shard(params, opt, mesh)
+    step = make_train_step(cfg, opt_cfg, mesh, donate=False)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 33),
+                                          0, cfg.vocab)}
+    kops.BWD_FALLBACKS.clear()
+    moe_before = dict(MOE.DENSE_MOE_FALLBACKS)
+    p2, o2, m = step(sp, so, batch)
+    assert np.isfinite(float(m["loss"])), m
+    assert not dict(kops.BWD_FALLBACKS), dict(kops.BWD_FALLBACKS)
+    assert dict(MOE.DENSE_MOE_FALLBACKS) == moe_before, (
+        moe_before, dict(MOE.DENSE_MOE_FALLBACKS))
+
+    # ---- (2, 2) DP x Megatron-TP attention stack vs single device ----
+    cfg2 = ModelConfig("tk-sh4-tp", n_layers=2, d_model=64, n_heads=4,
+                       n_kv=2, d_ff=128, vocab=256,
+                       policy=PositPolicy(weights=P16_2))
+    params2 = init_params(jax.random.PRNGKey(0), cfg2)
+    opt2 = init_state(params2, opt_cfg)
+    mesh2 = make_serving_mesh(2, 2)
+    sp2, so2 = shard(params2, opt2, mesh2)
+    step2 = make_train_step(cfg2, opt_cfg, mesh2, donate=False)
+    kops.BWD_FALLBACKS.clear()
+    pa, oa, ma = step2(sp2, so2, batch)
+    assert not dict(kops.BWD_FALLBACKS), dict(kops.BWD_FALLBACKS)
+
+    step1 = make_train_step(cfg2, opt_cfg, donate=False)
+    pb, ob, mb = step1(params2, opt2, batch)
+    np.testing.assert_allclose(float(ma["loss"]), float(mb["loss"]),
+                               rtol=2e-4)
+    np.testing.assert_allclose(float(ma["grad_norm"]),
+                               float(mb["grad_norm"]), rtol=2e-3)
+    for (ka, a), (kb, b) in zip(jax.tree_util.tree_leaves_with_path(pa),
+                                jax.tree_util.tree_leaves_with_path(pb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-3, err_msg=str(ka))
+    print("TRAIN-SHARDED-OK")
+""")
+
+
+def test_shard_map_train_step_4dev_zero_fallbacks():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "TRAIN-SHARDED-OK" in out.stdout

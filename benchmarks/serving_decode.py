@@ -35,6 +35,9 @@ SHARDED_RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..",
                                     "BENCH_serving_sharded.json")
 PREFILL_RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..",
                                     "experiments", "BENCH_prefill.json")
+ROBUSTNESS_RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                       "experiments",
+                                       "BENCH_robustness.json")
 
 
 def make_workload(n_req: int, min_len: int, max_len: int, min_new: int,
@@ -480,6 +483,114 @@ def bench_prefill(smoke: bool = False, posits=("off", "p8", "p16"),
 
 
 # --------------------------------------------------------------------------
+# robustness / chaos lane: graceful degradation under injected faults
+# --------------------------------------------------------------------------
+def _drain_timed(eng, reqs) -> dict:
+    """Submit `reqs` ((prompt, max_new, ttl_steps) triples) up front
+    (2x-oversubscribed load: the queue is the point), drain, and record
+    per-request completion latency (submit-all -> structured outcome).
+    Returns the row the chaos bench reports."""
+    eng.reset_stats()
+    rids = [eng.submit(p, m, ttl_steps=ttl) for p, m, ttl in reqs]
+    done_t = {r: 0.0 for r in rids if r in eng.outcomes}  # insta-rejects
+    t0 = time.time()
+    while eng.waiting or eng.active:
+        eng.step()
+        now = time.time()
+        for rid in rids:
+            if rid not in done_t and rid in eng.outcomes:
+                done_t[rid] = now - t0
+    total = time.time() - t0
+    s = eng.stats()
+    n_gen = sum(len(eng.outcomes[r].tokens) for r in rids)
+    lat = sorted(done_t[r] for r in rids
+                 if eng.outcomes[r].status == "completed")
+    p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))] if lat else None
+    return {
+        "tok_s": round(n_gen / total, 2),
+        "rejection_rate": round(s["rejected"] / max(s["submitted"], 1), 4),
+        "completion_p50_s": (round(lat[len(lat) // 2], 4) if lat else None),
+        "completion_p99_s": (round(p99, 4) if p99 is not None else None),
+        "outcomes": {k: s[k] for k in
+                     ("completed", "rejected", "expired", "failed_nar",
+                      "failed_fault")},
+        "degradation": {k: s[k] for k in
+                        ("step_retries", "slots_quarantined",
+                         "scrubbed_pages", "straggler_steps")},
+        "injected": {k: s[k] for k in
+                     ("injected_step_faults", "injected_nar_poisons",
+                      "injected_page_poisons")},
+    }
+
+
+def bench_chaos(smoke: bool = False, posit: str = "p16") -> dict:
+    """Serving under fault injection vs the fault-free baseline at the
+    same 2x-oversubscribed load — the BENCH_robustness.json artifact.
+
+    Both rows submit every request up front (twice the engine's slot
+    count, bounded wait queue, per-request TTLs on a third of the
+    traffic), so queueing latency is part of p99 by construction.  The
+    chaos row layers the full seeded fault menu (serving/faults.py) on
+    top: device step failures, NaR-poisoned activations, bit-flipped KV
+    pages, stragglers.  The contract being measured: the drain terminates
+    with every submission resolved to a structured outcome (the pre-ISSUE-9
+    engine crashed the whole process instead), throughput degrades
+    proportionally to the injected fault mass, and the rejection rate
+    stays a queue-depth property rather than a failure mode."""
+    from repro.serving.engine import PagedServingEngine
+    from repro.serving.faults import ChaosConfig
+    if smoke:
+        n_req, batch, min_len, max_len = 8, 4, 16, 96
+        min_new, max_new, page_size, prefill_chunk = 6, 10, 16, 32
+    else:
+        n_req, batch, min_len, max_len = 16, 8, 64, 512
+        min_new, max_new, page_size, prefill_chunk = 8, 24, 32, 128
+    params, cfg = _bench_model(posit=posit)
+    reqs = make_workload(n_req, min_len, max_len, min_new, max_new,
+                         cfg.vocab, seed=11)
+    table_width = -(-(max_len + max_new) // page_size)
+    chaos = ChaosConfig(seed=5, p_step_fault=0.02, p_nar_poison=0.02,
+                        p_page_poison=0.03, p_straggle=0.1,
+                        straggle_s=0.001, max_injections=6)
+
+    def mk(inject):
+        return PagedServingEngine(
+            params, cfg, max_seqs=batch, page_size=page_size,
+            table_width=table_width, prefill_chunk=prefill_chunk,
+            max_waiting=2 * n_req, chaos=chaos if inject else None)
+
+    def load():
+        # every fourth request carries a TTL ~ the expected drain depth,
+        # so expiry competes with completion exactly as in production
+        ttl = 4 * (max_new + 2)
+        return [(p.copy(), m, ttl if j % 4 == 3 else None)
+                for j, (p, m) in enumerate(reqs)]
+
+    def run_row(inject):
+        eng = mk(inject)
+        _drain_timed(eng, load())               # warmup: compile buckets
+        eng2 = mk(inject)
+        return _drain_timed(eng2, load())
+
+    rows = {"baseline": run_row(False), "chaos": run_row(True)}
+    res = {"smoke": smoke, "posit": posit, "n_req": n_req, "slots": batch,
+           "oversubscription": round(n_req / batch, 1),
+           "prompt_lens": [min_len, max_len],
+           "chaos_config": {
+               "p_step_fault": chaos.p_step_fault,
+               "p_nar_poison": chaos.p_nar_poison,
+               "p_page_poison": chaos.p_page_poison,
+               "p_straggle": chaos.p_straggle,
+               "max_injections": chaos.max_injections},
+           "rows": rows}
+    os.makedirs(os.path.dirname(ROBUSTNESS_RESULTS_PATH), exist_ok=True)
+    with open(ROBUSTNESS_RESULTS_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"wrote {os.path.normpath(ROBUSTNESS_RESULTS_PATH)}")
+    return res
+
+
+# --------------------------------------------------------------------------
 # sharded serving: tok/s vs device count (each count in its own subprocess —
 # jax locks the host device count at first backend init)
 # --------------------------------------------------------------------------
@@ -592,6 +703,10 @@ def main():
                     help="recurrent/hybrid state-pool serving vs a full-"
                          "attention comparator -> BENCH_serving.json "
                          "'recurrent' key")
+    ap.add_argument("--chaos", action="store_true",
+                    help="graceful degradation under seeded fault "
+                         "injection at 2x-oversubscribed load vs the "
+                         "fault-free baseline -> BENCH_robustness.json")
     ap.add_argument("--sharded-worker", type=int, default=None,
                     help=argparse.SUPPRESS)
     args = ap.parse_args()
@@ -605,6 +720,10 @@ def main():
         return
     if args.prefill:
         print(json.dumps(bench_prefill(smoke=args.smoke), indent=1))
+        return
+    if args.chaos:
+        print(json.dumps(bench_chaos(smoke=args.smoke, posit=args.posit),
+                         indent=1))
         return
     if args.recurrent:
         res = bench_recurrent(smoke=args.smoke, posit=args.posit)

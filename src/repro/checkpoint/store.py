@@ -29,6 +29,21 @@ def _leaf_files(tree):
     return leaves, treedef
 
 
+_HASH_CHUNK = 1 << 20    # 1 MiB: bounded memory however large the leaf
+
+
+def _leaf_digest(arr: np.ndarray) -> str:
+    """Full-content sha256 of one leaf, streamed in chunks (no whole-leaf
+    bytes copy: the digest walks a memoryview of the array buffer).  A
+    prefix-only hash (the old `tobytes()[:4096]`) let any corruption past
+    the first 4 KiB of a leaf pass validation silently."""
+    h = hashlib.sha256()
+    mv = memoryview(np.ascontiguousarray(arr)).cast("B")
+    for off in range(0, len(mv), _HASH_CHUNK):
+        h.update(mv[off:off + _HASH_CHUNK])
+    return h.hexdigest()
+
+
 def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
@@ -46,9 +61,11 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
         arr = np.asarray(leaf)
         fn = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fn), arr)
-        h.update(arr.tobytes()[:4096])          # prefix hash: cheap + catches truncation
+        digest = _leaf_digest(arr)
+        h.update(digest.encode())               # combined hash over digests
         manifest["leaves"].append({"file": fn, "dtype": str(arr.dtype),
-                                   "shape": list(arr.shape)})
+                                   "shape": list(arr.shape),
+                                   "sha256": digest})
     manifest["hash"] = h.hexdigest()
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -71,11 +88,21 @@ def _try_load(path: str, example_tree):
     _, treedef = jax.tree_util.tree_flatten(example_tree)
     leaves = []
     h = hashlib.sha256()
+    legacy = any("sha256" not in spec for spec in manifest["leaves"])
     for spec in manifest["leaves"]:
         arr = np.load(os.path.join(path, spec["file"]))
         if str(arr.dtype) != spec["dtype"] or list(arr.shape) != spec["shape"]:
             raise IOError(f"leaf mismatch in {path}: {spec}")
-        h.update(arr.tobytes()[:4096])
+        if legacy:
+            # pre-sha256 manifests: the old combined prefix hash is all
+            # there is to check (full-digest validation needs a re-save)
+            h.update(arr.tobytes()[:4096])
+        else:
+            digest = _leaf_digest(arr)
+            if digest != spec["sha256"]:
+                raise IOError(f"leaf hash mismatch in {path}: "
+                              f"{spec['file']}")
+            h.update(digest.encode())
         leaves.append(arr)
     if h.hexdigest() != manifest["hash"]:
         raise IOError(f"hash mismatch in {path}")

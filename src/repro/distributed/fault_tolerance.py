@@ -1,12 +1,22 @@
 """Fault tolerance, straggler mitigation, elasticity — the runbook layer.
 
 What is implemented and exercised in this repo (CPU container):
-  * checkpoint/restart: atomic manifest-verified checkpoints
-    (checkpoint/store.py) + a seekable pipeline (data/pipeline.py) make the
-    (params, opt_state, step) triple the full training state; the trainer
-    (training/trainer.py) auto-resumes from the newest valid step, skipping
-    corrupted/partial directories.  tests/test_fault_tolerance.py kills a
-    run mid-flight and asserts bit-identical continuation.
+  * checkpoint/restart: atomic manifest-verified checkpoints with full
+    per-leaf sha256 digests (checkpoint/store.py) + a seekable pipeline
+    (data/pipeline.py) make the (params, opt_state, step) triple the full
+    training state; the trainer (training/trainer.py) auto-resumes from
+    the newest valid step, skipping corrupted/partial directories.
+    tests/test_fault_tolerance.py kills a run mid-flight (subprocess
+    SIGKILL) and asserts bit-identical continuation, fallback past a
+    corrupted step dir, and that a flipped byte deep in a leaf (past the
+    old 4 KiB prefix hash) is caught.
+  * NaR/non-finite containment: a non-finite gradient norm skips the
+    optimizer update and increments the checkpointed
+    opt_state["nar_skips"] counter (optim/adamw.py, guard selected
+    per-leaf so the happy path is bit-identical); the serving engine
+    detects NaR in output logits on device and fails only the poisoned
+    request (serving/engine.py, chaos harness in serving/faults.py,
+    drains exercised by tests/test_chaos_serving.py).
   * elastic data-parallel resize: per-host batches are *derived*
     (host_batch_at(step, host_id, num_hosts)), so a restart with a different
     data-axis size resumes the same global batch sequence; param shardings

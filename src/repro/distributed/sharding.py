@@ -281,12 +281,18 @@ def paged_pool_pspecs(pages, mesh):
 
 
 def opt_state_pspecs(opt_state, param_specs, mesh):
-    """Moments mirror parameter sharding; step is replicated."""
-    return {
+    """Moments mirror parameter sharding; scalars (step, the NaR-guard
+    skip counter) are replicated.  Keys mirror the opt_state actually
+    passed so pre-nar_skips checkpoints still shard cleanly."""
+    specs = {
         "step": P(),
         "m": param_specs,
         "v": param_specs,
     }
+    for k in opt_state:
+        if k not in specs:
+            specs[k] = P()
+    return specs
 
 
 def dp_axes(mesh, multi_pod: bool, strategy: str):

@@ -49,6 +49,22 @@ def main():
     ap.add_argument("--host-devices", type=int, default=None,
                     help="force N CPU host devices (sets XLA_FLAGS; must "
                          "run before jax initializes)")
+    # graceful-degradation / chaos knobs (paged engine)
+    ap.add_argument("--max-waiting", type=int, default=None,
+                    help="paged: bound the admission queue; overflow "
+                         "submissions resolve `rejected` with a "
+                         "retry-after hint instead of queueing forever")
+    ap.add_argument("--ttl-steps", type=int, default=None,
+                    help="paged: per-request TTL in engine steps; "
+                         "exceeded -> `expired`, pages return to the pool")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="paged: per-request wall-clock deadline (s)")
+    ap.add_argument("--chaos", default=None, metavar="KIND=P[,KIND=P...]",
+                    help="paged: seeded fault injection, e.g. "
+                         "'step_fault=0.05,nar_poison=0.02,"
+                         "page_poison=0.02,straggle=0.1' "
+                         "(see serving/faults.py)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.host_devices:
@@ -118,11 +134,20 @@ def main():
     print(f"[serve] cache backends: {kinds}; per-seq cache at "
           f"{cap} tokens = "
           f"{layout.cache_bytes_per_seq(cap, args.page_size) / 1e3:.1f} KB")
+    chaos = None
+    if args.chaos:
+        from repro.serving.faults import ChaosConfig
+        kv = dict(part.split("=") for part in args.chaos.split(","))
+        chaos = ChaosConfig(seed=args.chaos_seed,
+                            **{f"p_{k}": float(v) for k, v in kv.items()})
+        print(f"[serve] chaos: {chaos}")
     eng = PagedServingEngine(
         params, cfg, max_seqs=args.batch, page_size=args.page_size,
         table_width=width, prefill_chunk=args.prefill_chunk,
         temperature=args.temperature,
-        prefix_cache=not args.no_prefix_cache, mesh=mesh)
+        prefix_cache=not args.no_prefix_cache, mesh=mesh,
+        max_waiting=args.max_waiting, default_ttl_steps=args.ttl_steps,
+        default_deadline_s=args.deadline_s, chaos=chaos)
     reqs = []
     for _ in range(n_req):
         plen = int(rng.integers(max(1, args.prompt_len // 4),
@@ -132,11 +157,17 @@ def main():
     results = eng.run(reqs)
     dt = time.time() - t0
     n_tok = sum(len(v) for v in results.values())
+    stats = eng.stats()
     print(f"[serve] paged: {len(results)} requests, {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok / dt:.1f} tok/s incl. compile); "
-          f"stats={eng.stats()}")
-    first = results[min(results)]
-    print(f"[serve] rid {min(results)}: {first[:12]}")
+          f"stats={stats}")
+    from repro.serving.engine import OUTCOMES
+    outcome_line = " ".join(f"{k}={stats.get(k, 0)}" for k in OUTCOMES)
+    print(f"[serve] outcomes: submitted={stats.get('submitted', 0)} "
+          f"{outcome_line}")
+    if results:
+        first = results[min(results)]
+        print(f"[serve] rid {min(results)}: {first[:12]}")
 
 
 if __name__ == "__main__":

@@ -368,6 +368,20 @@ def copy_paged_pages(pages, src, dst):
                          for p in pages["rem"])}
 
 
+def poison_paged_pages(pages, pg):
+    """Overwrite page `pg` with the posit NaR pattern (NaN for float
+    pools) in every KV layer — the device half of the chaos harness's
+    bit-flipped-page injection (serving/faults.py).  State-pool layers
+    pass through untouched, like copy_paged_pages."""
+    from repro.serving.paged_kv import poison_layer_pages
+    return {"scanned": tuple(poison_layer_pages(p, pg, stacked=True)
+                             if "k_pages" in p else p
+                             for p in pages["scanned"]),
+            "rem": tuple(poison_layer_pages(p, pg)
+                         if "k_pages" in p else p
+                         for p in pages["rem"])}
+
+
 def extract_paged_pages(caches):
     """Inverse of assemble_paged_caches: keep only the device-resident
     pools (the scheduler recomputes the rest every step)."""

@@ -44,6 +44,10 @@ def init_state(params, cfg: OptConfig) -> dict[str, Any]:
         "step": jnp.zeros((), jnp.int32),
         "m": jax.tree_util.tree_map(zeros, params),
         "v": jax.tree_util.tree_map(zeros, params),
+        # lifetime count of optimizer updates skipped by the non-finite
+        # (NaR) gradient guard; lives in the optimizer state so checkpoint
+        # resume preserves it bit-identically
+        "nar_skips": jnp.zeros((), jnp.int32),
     }
 
 
@@ -59,10 +63,21 @@ def apply_updates(params, grads, state, cfg: OptConfig, grad_norm=None):
     step passes the mesh-correct norm (model-sharded leaves psum their
     squared sums; a local global_norm would double-count replicated leaves
     or miss TP shards); single-device callers leave it None.
+
+    NaR containment: a non-finite global norm (a NaN/Inf — what a posit
+    NaR decodes to — anywhere in the gradient tree propagates into the
+    squared-sum) skips the whole update — params, moments, step, and LR
+    schedule are carried forward unchanged — and increments
+    state["nar_skips"].  The guard is a per-leaf where-select, so the
+    happy path is bit-identical to unguarded AdamW and the skip count
+    rides the checkpointed optimizer state (resume preserves it).
     """
-    step = state["step"] + 1
     gn = global_norm(grads) if grad_norm is None else grad_norm
-    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+    ok = jnp.isfinite(gn)
+    step = state["step"] + ok.astype(jnp.int32)
+    # a NaN gn would make `scale` NaN and poison newp even under the
+    # where-select's untaken branch bookkeeping; pin it finite when skipping
+    scale = jnp.where(ok, jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9)), 0.0)
     lr = lr_at(step, cfg)
     mdt = jnp.dtype(cfg.moment_dtype)
 
@@ -70,7 +85,7 @@ def apply_updates(params, grads, state, cfg: OptConfig, grad_norm=None):
     bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
 
     def upd(p, g, m, v):
-        g = g.astype(jnp.float32) * scale
+        g = jnp.where(ok, g.astype(jnp.float32) * scale, 0.0)
         m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
         v32 = v.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
         mh = m32 / bc1
@@ -78,7 +93,9 @@ def apply_updates(params, grads, state, cfg: OptConfig, grad_norm=None):
         delta = mh / (jnp.sqrt(vh) + cfg.eps)
         decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
         newp = p.astype(jnp.float32) - lr * (delta + decay)
-        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+        return (jnp.where(ok, newp.astype(p.dtype), p),
+                jnp.where(ok, m32.astype(mdt), m),
+                jnp.where(ok, v32.astype(mdt), v))
 
     flat_p, tdef = jax.tree_util.tree_flatten(params)
     flat_g = jax.tree_util.tree_leaves(grads)
@@ -88,5 +105,8 @@ def apply_updates(params, grads, state, cfg: OptConfig, grad_norm=None):
     new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
     new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
     new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
-    new_state = {"step": step, "m": new_m, "v": new_v}
-    return new_p, new_state, {"grad_norm": gn, "lr": lr}
+    skips = (state.get("nar_skips", jnp.zeros((), jnp.int32))
+             + (1 - ok.astype(jnp.int32)))
+    new_state = {"step": step, "m": new_m, "v": new_v, "nar_skips": skips}
+    return new_p, new_state, {"grad_norm": gn, "lr": lr,
+                              "nar_skips": skips}

@@ -33,12 +33,32 @@ a `mesh`, the step becomes one shard_map over ("data", "model"): sequence
 slots/pages data-parallel, weights Megatron tensor-parallel (see
 _sharded_paged_step) — the host scheduler is a pure page/slot bookkeeper
 and is identical in both modes.
+
+Robustness contract (the chaos-hardened layer; serving/faults.py injects,
+tests/test_chaos_serving.py asserts): every submitted request resolves to
+exactly one structured outcome —
+
+    completed     all requested tokens generated
+    rejected      admission backpressure (bounded queue / pool capacity)
+    expired       per-request deadline or step-TTL hit; partial tokens kept
+    failed_nar    NaR/non-finite detected in the request's output logits
+    failed_fault  its device step failed twice; the slot is quarantined
+
+— and a drain never raises, no matter how oversubscribed the pool is or
+what faults the step path throws.  NaR detection runs on device inside the
+jitted step: a per-slot O(1) finiteness reduction over the last-position
+logits (posit NaR decodes to NaN in the f32 logit domain, so one check
+covers NaR-poisoned KV pages, activations and genuine numerical blowup)
+whose [max_seqs] bool rides back with the sampled tokens — no extra host
+sync on the happy path.  Outcomes and per-request partial tokens live in
+`engine.outcomes`; `stats()` carries the full outcome/fault counter set.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import time
 from collections import deque
 
 import numpy as np
@@ -47,10 +67,12 @@ import jax.numpy as jnp
 
 from repro.models.transformer import (ModelConfig, assemble_paged_caches,
                                       copy_paged_pages, extract_paged_pages,
-                                      forward, init_caches, init_paged_pages)
+                                      forward, init_caches, init_paged_pages,
+                                      poison_paged_pages)
 from repro.serving.backends import layout_for
-from repro.serving.paged_kv import (GATHER_FALLBACKS, PagePool,
-                                    reclaimable_pages)
+from repro.serving.faults import InjectedFault, as_injector
+from repro.serving.paged_kv import (GARBAGE_PAGE, GATHER_FALLBACKS, PagePool,
+                                    PoolExhausted, reclaimable_pages)
 from repro.serving.prefix_cache import RadixIndex
 
 # python-body executions of the traced step fns — i.e. trace counts.  Tests
@@ -159,12 +181,22 @@ def _sample_on_device(last, *, greedy: bool, temperature, seed, step_idx,
 
 
 def _step_body(cfg: ModelConfig, greedy: bool, p, tokens, pages, pt, sl, nn,
-               temp, seed, step_idx, *, slot_offset=0, tp_size: int = 1,
-               vocab_sharded: bool = False, compress=None):
+               temp, seed, step_idx, poison, *, slot_offset=0,
+               tp_size: int = 1, vocab_sharded: bool = False, compress=None):
     """The paged serving step, shared verbatim by the single-device and the
     mesh-sharded builders (under shard_map the tensor_parallel context and
     the shard's slot_offset are the only differences — keeping one body
-    means a sampling or last-position fix cannot diverge between them)."""
+    means a sampling or last-position fix cannot diverge between them).
+
+    poison [B] bool: chaos-injected NaR-poisoned activations — the flagged
+    slots' last-position logits are overwritten with NaN *on device*, which
+    is exactly what a NaR reaching the unembed decodes to.  Returns a third
+    output, nar [B] bool: the per-slot NaR detector — one finiteness
+    reduction over each slot's own logits row (posit NaR -> NaN in the f32
+    logit domain, eq. (4) pattern check landed after decode), so a poisoned
+    KV page, a poisoned activation or a real numerical blowup all trip it,
+    and only for the slot that produced it.  The flags ride back with the
+    sampled tokens; the happy path pays no extra host sync."""
     from repro.distributed.collectives import tensor_parallel
 
     with tensor_parallel("model", tp_size, vocab_sharded, compress):
@@ -173,12 +205,20 @@ def _step_body(cfg: ModelConfig, greedy: bool, p, tokens, pages, pt, sl, nn,
     # last *valid* position per slot (ragged prefill chunks)
     idx = jnp.clip(nn - 1, 0, tokens.shape[1] - 1)
     last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    last = jnp.where(poison[:, None], jnp.float32(jnp.nan), last)
+    nar = jnp.any(~jnp.isfinite(last), axis=-1)
+    if tp_size > 1 and vocab_sharded:
+        # each model member sees only its vocab shard of `last`; a NaR in
+        # any shard must flag the slot on every member (O(B) ints)
+        nar = jax.lax.psum(nar.astype(jnp.int32), "model") > 0
     toks = _sample_on_device(last, greedy=greedy, temperature=temp,
                              seed=seed, step_idx=step_idx,
                              slot_offset=slot_offset,
                              tp_axis="model" if tp_size > 1 else None,
                              vocab_sharded=vocab_sharded)
-    return toks, extract_paged_pages(new_caches)
+    # a NaR'd row samples garbage (argmax over NaNs) — the host discards
+    # the token for flagged slots and fails the request instead
+    return toks, nar, extract_paged_pages(new_caches)
 
 
 @functools.lru_cache(maxsize=64)
@@ -186,13 +226,14 @@ def _paged_step(cfg: ModelConfig, greedy: bool = True):
     """The fused paged serving step, jitted once per (model config, sampling
     mode) and shared by every engine instance (a per-engine jit would
     recompile identical shapes for each engine — e.g. one per benchmark
-    repetition).  Returns ([max_seqs] int32 sampled tokens, new pages) —
-    token ids are the only device->host traffic a step produces."""
-    def step(p, tokens, pages, pt, sl, nn, temp, seed, step_idx):
+    repetition).  Returns ([max_seqs] int32 sampled tokens, [max_seqs]
+    bool NaR flags, new pages) — the token ids and per-slot flags are the
+    only device->host traffic a step produces, still O(max_seqs)."""
+    def step(p, tokens, pages, pt, sl, nn, temp, seed, step_idx, poison):
         STEP_TRACES[("paged_step", cfg.name, tokens.shape[1],
                      pt.shape[1])] += 1
         return _step_body(cfg, greedy, p, tokens, pages, pt, sl, nn, temp,
-                          seed, step_idx)
+                          seed, step_idx, poison)
 
     return jax.jit(step, donate_argnums=(2,))
 
@@ -224,24 +265,26 @@ def _sharded_paged_step(cfg: ModelConfig, mesh, greedy: bool = True,
     ndata, ntp = mesh.shape["data"], mesh.shape["model"]
     vocab_sharded = ntp > 1 and cfg.vocab % ntp == 0
 
-    def body(p, tokens, pages, pt, sl, nn, temp, seed, step_idx):
+    def body(p, tokens, pages, pt, sl, nn, temp, seed, step_idx, poison):
         STEP_TRACES[("sharded_paged_step", cfg.name, ndata, ntp,
                      tokens.shape[1], pt.shape[1])] += 1
         return _step_body(
             cfg, greedy, p, tokens, pages, pt, sl, nn, temp, seed, step_idx,
+            poison,
             slot_offset=jax.lax.axis_index("data") * tokens.shape[0],
             tp_size=ntp, vocab_sharded=vocab_sharded, compress=compress)
 
-    def step(p, tokens, pages, pt, sl, nn, temp, seed, step_idx):
+    def step(p, tokens, pages, pt, sl, nn, temp, seed, step_idx, poison):
         data_rows = P("data", None)
         return shard_map(
             body, mesh=mesh,
             in_specs=(serving_param_pspecs(p, mesh), data_rows,
                       paged_pool_pspecs(pages, mesh), data_rows,
-                      P("data"), P("data"), P(), P(), P()),
-            out_specs=(P("data"), paged_pool_pspecs(pages, mesh)),
+                      P("data"), P("data"), P(), P(), P(), P("data")),
+            out_specs=(P("data"), P("data"),
+                       paged_pool_pspecs(pages, mesh)),
             check_rep=False,
-        )(p, tokens, pages, pt, sl, nn, temp, seed, step_idx)
+        )(p, tokens, pages, pt, sl, nn, temp, seed, step_idx, poison)
 
     return jax.jit(step, donate_argnums=(2,))
 
@@ -279,6 +322,16 @@ def _sharded_paged_copy(cfg: ModelConfig, mesh):
     return jax.jit(step, donate_argnums=(0,))
 
 
+@functools.lru_cache(maxsize=64)
+def _paged_poison(cfg: ModelConfig):
+    """Jitted whole-tree NaR page poison (the chaos harness's bit-flipped
+    page), once per model config; donates the pools like the copy fn."""
+    def po(pages, pg):
+        return poison_paged_pages(pages, pg)
+
+    return jax.jit(po, donate_argnums=(0,))
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -289,6 +342,39 @@ class Request:
     # caller still receives all of them
     prior: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros((0,), np.int32))
+    # graceful-degradation fields: a step-based TTL and/or an absolute
+    # wall-clock deadline; both survive preemption (the re-queued Request
+    # keeps the original submission's clock)
+    ttl_steps: int | None = None       # device steps from submission
+    deadline_t: float | None = None    # absolute time.time() cutoff
+    submit_step: int = 0               # engine._step_idx at submission
+
+
+@dataclasses.dataclass
+class RequestOutcome:
+    """How one request resolved — the structured result every submission
+    gets exactly one of (never an unhandled exception):
+
+      completed     tokens == everything asked for
+      rejected      backpressure: bounded queue or pool capacity; tokens
+                    hold whatever was generated before the reject (empty
+                    for submit-time rejections); retry_after_steps is the
+                    backoff hint for queue-full rejections
+      expired       deadline/TTL hit; tokens are the partial prefix
+      failed_nar    NaR detected in this request's logits; tokens are the
+                    clean prefix generated before the poison
+      failed_fault  device step failed twice; slot quarantined
+    """
+    rid: int
+    status: str
+    tokens: np.ndarray
+    detail: str = ""
+    retry_after_steps: int | None = None
+    step: int = 0                 # engine._step_idx at resolution
+    time_s: float = 0.0           # wall clock at resolution
+
+
+OUTCOMES = ("completed", "rejected", "expired", "failed_nar", "failed_fault")
 
 
 @dataclasses.dataclass
@@ -369,6 +455,21 @@ class PagedServingEngine:
         the per-block TP psums (distributed.collectives).  Profitable on
         slow inter-chip links; costs the wire quantization, so exact
         single-device parity holds only when off.
+    max_waiting:  bounded admission queue (backpressure).  A submit that
+        finds the queue full resolves immediately as `rejected` with a
+        retry_after_steps hint instead of growing the queue without bound.
+        None (default): unbounded, the pre-robustness behavior.
+    default_ttl_steps / default_deadline_s: per-request defaults for
+        submit()'s ttl_steps/deadline_s (None = no deadline).  An expired
+        request is cancelled at the next scheduler iteration: its pages and
+        state slot return to the pool and it resolves as `expired` with the
+        partial tokens generated so far.
+    chaos:        a serving.faults.ChaosConfig/ChaosInjector — seeded fault
+        injection on the step path (simulated device failures, NaR-poisoned
+        activations, bit-flipped KV pages, stragglers).  Page poison
+        requires mesh=None (the injector targets shard-local page ids).
+        None (default): no injection; the detection/containment paths stay
+        active for real faults either way.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_seqs: int = 8,
@@ -378,7 +479,11 @@ class PagedServingEngine:
                  bucket_pages: bool = True,
                  admit_threshold: int | None = None,
                  prefix_cache: bool = True,
-                 mesh=None, tp_compress=None):
+                 mesh=None, tp_compress=None,
+                 max_waiting: int | None = None,
+                 default_ttl_steps: int | None = None,
+                 default_deadline_s: float | None = None,
+                 chaos=None):
         self.params, self.cfg = params, cfg
         self.max_seqs, self.page = max_seqs, page_size
         self.width = table_width
@@ -465,7 +570,12 @@ class PagedServingEngine:
         # pages cannot migrate between sub-pools, so dedup staying
         # shard-local is what keeps DP bit-parity with one device
         self._prefix = None
+        # page copy fn: COW for the prefix cache, and NaR-page scrubbing
+        # when a failed request's pages return to the pool
         self._copy_fn = None
+        if self._needs_pages:
+            self._copy_fn = (_paged_copy(cfg) if mesh is None
+                             else _sharded_paged_copy(cfg, mesh))
         if prefix_cache and not self.layout.supports_prefix_cache:
             # state slots are mutable accumulators, not content-addressed
             # immutable pages — prefix caching cleanly no-ops for any
@@ -476,8 +586,6 @@ class PagedServingEngine:
                    f"|n_kv={cfg.n_kv}|hd={cfg.hd}")
             self._prefix = [RadixIndex(key, page_size)
                             for _ in range(self.n_shards)]
-            self._copy_fn = (_paged_copy(cfg) if mesh is None
-                             else _sharded_paged_copy(cfg, mesh))
         self.table = np.zeros((max_seqs, table_width), np.int32)
         self.seq_lens = np.zeros((max_seqs,), np.int32)
         self.slots: list[_Slot | None] = [None] * max_seqs
@@ -488,6 +596,20 @@ class PagedServingEngine:
         self._seed = int(seed) % (2 ** 31 - 1)
         self._step_idx = 0
         self.finished: dict[int, np.ndarray] = {}
+        self.outcomes: dict[int, RequestOutcome] = {}
+        self.max_waiting = max_waiting
+        self.default_ttl_steps = default_ttl_steps
+        self.default_deadline_s = default_deadline_s
+        self._quarantined: set[int] = set()
+        self._chaos = as_injector(chaos)
+        self._poison_fn = None
+        if self._chaos is not None and self._chaos.cfg.p_page_poison > 0:
+            if mesh is not None:
+                raise ValueError("page-poison injection targets shard-local "
+                                 "page ids; run chaos page poison with "
+                                 "mesh=None")
+            if self._needs_pages:
+                self._poison_fn = _paged_poison(cfg)
         self.counters = collections.Counter()
         self._gather_base = self._moe_base = self._rec_base = 0
         # eager sliding-window page reclamation: sound only when *every*
@@ -545,7 +667,10 @@ class PagedServingEngine:
     def _alloc_page(self, i: int) -> int:
         """One fresh page for slot i's shard: the free stack, else LRU
         eviction of idle cached prefix pages, else preemption of a live
-        sequence (strictly in that order)."""
+        sequence (strictly in that order).  Raises PoolExhausted when all
+        three run dry — slot i alone exceeds its shard's pool — which the
+        scheduler converts into a structured `rejected` outcome for slot
+        i's request (never an unhandled exception out of a drain)."""
         pool = self._pools[self._shard(i)]
         while True:
             pg = pool.try_alloc()
@@ -554,7 +679,7 @@ class PagedServingEngine:
             if self._evict_one(self._shard(i)):
                 continue
             if not self._preempt(exclude=i):
-                raise RuntimeError(
+                raise PoolExhausted(
                     "KV pool exhausted and nothing left to evict or "
                     "preempt; grow num_pages or lower max_seqs")
 
@@ -703,10 +828,134 @@ class PagedServingEngine:
         remaining = req.max_new - len(slot.generated)
         self.waiting.appendleft(Request(req.rid, new_prompt, remaining,
                                         prior=np.concatenate([req.prior,
-                                                              gen])))
+                                                              gen]),
+                                        ttl_steps=req.ttl_steps,
+                                        deadline_t=req.deadline_t,
+                                        submit_step=req.submit_step))
         self._free_slot(i)
         self.counters["preempted"] += 1
         return True
+
+    # ---- structured outcomes / graceful degradation ----------------------
+    def _resolve(self, req: Request, status: str, detail: str = "",
+                 retry_after: int | None = None, generated=None):
+        """Record request `req`'s terminal outcome (exactly one per rid).
+        `generated` is the token list/array produced since the last
+        (re-)admission; the caller's view is always prior + generated."""
+        gen = np.asarray([] if generated is None else generated, np.int32)
+        toks = np.concatenate([req.prior, gen]) if len(req.prior) else gen
+        self.outcomes[req.rid] = RequestOutcome(
+            rid=req.rid, status=status, tokens=toks, detail=detail,
+            retry_after_steps=retry_after, step=self._step_idx,
+            time_s=time.time())
+        self.counters[status] += 1
+        if status == "completed":
+            self.finished[req.rid] = toks
+            self.counters["finished"] += 1      # legacy alias
+
+    def _fail_slot(self, i: int, status: str, detail: str):
+        """Resolve slot i's request as `status` (partial tokens kept) and
+        hand every resource it held back to the pool.  NaR-failed slots
+        scrub their private pages first — see _scrub_slot_pages."""
+        slot = self.slots[i]
+        if status == "failed_nar":
+            self._scrub_slot_pages(i)
+        self._resolve(slot.req, status, detail=detail,
+                      generated=slot.generated)
+        self._free_slot(i)
+
+    def _scrub_slot_pages(self, i: int):
+        """Overwrite a NaR'd sequence's *private* pages with the garbage
+        page's (finite) bits before they return to the free list.
+
+        Recycled pages are never *read as valid* — the attention masks
+        exclude their positions — but masked positions still multiply into
+        the value aggregation as exp(-inf) = 0 times v, and 0 * NaN is
+        NaN: finite stale garbage in a recycled page is harmless, NaR/NaN
+        bits would poison the page's next owner.  Shared/cached pages were
+        written by healthy requests (a failed slot never registers pages,
+        and mid-page writes COW first), so private pages are exactly the
+        set the NaR'd request may have contaminated."""
+        if not self._needs_pages or self._copy_fn is None:
+            return
+        shard = self._shard(i)
+        pool = self._pools[shard]
+        for pg in self.slots[i].pages:
+            if pg and pool.ref_count(pg) == 1 and not pool.is_cached(pg):
+                self._device_copy(shard, GARBAGE_PAGE, pg)
+                self.counters["scrubbed_pages"] += 1
+
+    def _quarantine(self, participants):
+        """A step failed twice: fail its surviving participants loudly and
+        quarantine their slots (a quarantined slot is never re-admitted —
+        the model of a sick device lane).  The engine keeps serving on the
+        remaining slots; with none left, waiting requests reject at
+        admission instead of hanging."""
+        for i in list(participants):
+            if self.slots[i] is None:
+                continue
+            self._fail_slot(i, "failed_fault",
+                            "device step failed twice; slot quarantined")
+            self._quarantined.add(i)
+            self.counters["slots_quarantined"] += 1
+
+    def _expired(self, req: Request, now: float) -> bool:
+        if (req.ttl_steps is not None
+                and self._step_idx - req.submit_step >= req.ttl_steps):
+            return True
+        return req.deadline_t is not None and now >= req.deadline_t
+
+    def _expire_deadlines(self):
+        """Cancel active and waiting requests whose TTL/deadline passed:
+        pages and state slots return to the pool immediately, the request
+        resolves as `expired` with its partial tokens."""
+        now = time.time()
+        for i, slot in enumerate(self.slots):
+            if slot is not None and self._expired(slot.req, now):
+                self._fail_slot(i, "expired", "deadline/TTL exceeded")
+        kept = deque()
+        for req in self.waiting:
+            if self._expired(req, now):
+                self._resolve(req, "expired",
+                              "deadline/TTL exceeded while queued")
+            else:
+                kept.append(req)
+        self.waiting = kept
+
+    def _maybe_poison_page(self):
+        """Chaos page-poison injection: flip one live page to NaR before
+        the step.  The victim is the lowest active slot's first fully
+        written, *unshared and uncached* page (containment must hold: a
+        shared page would legitimately fail every reader); no candidate —
+        no injection."""
+        if self._chaos is None or self._poison_fn is None:
+            return
+        victim = None
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            pool = self._pools[self._shard(i)]
+            full = int(self.seq_lens[i]) // self.page
+            for j in range(min(full, len(slot.pages))):
+                pg = slot.pages[j]
+                if pg and pool.ref_count(pg) == 1 and not pool.is_cached(pg):
+                    victim = pg
+                    break
+            if victim is not None:
+                break
+        # candidate first, injector second: a step with nothing safely
+        # poisonable must not consume the injection budget
+        if victim is None or not self._chaos.page_poison(self._step_idx):
+            return
+        self.pages = self._poison_fn(self.pages, jnp.int32(victim))
+        self.counters["injected_page_poisons"] += 1
+
+    def _retry_after_hint(self) -> int:
+        """Backoff hint for queue-full rejections: device steps until the
+        fastest active request can retire its slot (>= 1)."""
+        remaining = [s.req.max_new - len(s.generated)
+                     for s in self.slots if s is not None]
+        return max(1, min(remaining, default=1))
 
     def _admit(self):
         if not self.waiting:
@@ -717,7 +966,7 @@ class PagedServingEngine:
         # phase is already running (joining it is ~free), when nothing is
         # decoding (nothing to stall), or when enough slots accumulated.
         phases = [s.phase for s in self.slots if s is not None]
-        n_free = self.max_seqs - len(phases)
+        n_free = self.max_seqs - len(phases) - len(self._quarantined)
         if ("decode" in phases and "prefill" not in phases
                 and n_free < max(1, self.admit_threshold)):
             return
@@ -729,7 +978,7 @@ class PagedServingEngine:
             # still needs fit its shard's free + evictable headroom
             best = None
             for i in range(self.max_seqs):
-                if self.slots[i] is not None:
+                if self.slots[i] is not None or i in self._quarantined:
                     continue
                 pool = self._pools[self._shard(i)]
                 hit = (self._prefix[self._shard(i)].probe(req.prompt)
@@ -744,10 +993,19 @@ class PagedServingEngine:
                     best = ((cached, -i), i)
             if best is None:
                 if self.active == 0:
-                    raise RuntimeError(
-                        f"request {req.rid} does not fit the idle pool "
-                        f"({len(self.free_pages)} free pages across "
-                        f"{self.n_shards} shard(s)); grow num_pages")
+                    # nothing running and still no slot fits: this request
+                    # can never be placed (pool too small for it alone, or
+                    # every slot quarantined).  Structured rejection, not a
+                    # crash — the drain keeps going.
+                    self.waiting.popleft()
+                    self._resolve(
+                        req, "rejected",
+                        detail=f"does not fit the idle pool "
+                               f"({len(self.free_pages)} free pages across "
+                               f"{self.n_shards} shard(s), "
+                               f"{len(self._quarantined)} slot(s) "
+                               f"quarantined)")
+                    continue
                 return
             i = best[1]
             self.waiting.popleft()
@@ -763,7 +1021,18 @@ class PagedServingEngine:
             self._attach_prefix(i)
 
     # ---- public API ------------------------------------------------------
-    def submit(self, prompt, max_new: int, rid: int | None = None) -> int:
+    def submit(self, prompt, max_new: int, rid: int | None = None, *,
+               ttl_steps: int | None = None,
+               deadline_s: float | None = None) -> int:
+        """Queue a request.  Malformed input (empty prompt, max_new < 1,
+        rid collision) still raises ValueError — those are caller bugs.
+        Load conditions never raise: a full wait queue or an over-capacity
+        request resolves to a structured `rejected` outcome instead.
+
+        `ttl_steps` / `deadline_s` bound the request's lifetime (device
+        steps from now / wall-clock seconds from now); either hitting its
+        limit cancels the request (`expired`), returning its pages and
+        state slots to the pool.  Defaults come from the engine ctor."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) == 0:
             # an empty prompt would enter decode with the -1 sentinel as a
@@ -771,15 +1040,9 @@ class PagedServingEngine:
             raise ValueError("prompt must contain at least one token")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
-        if self._needs_pages and len(prompt) + max_new > self.width * self.page:
-            # page-table capacity only binds layouts with KV layers; pure
-            # state-pool sequences are O(1) in length
-            raise ValueError(f"prompt+max_new = {len(prompt) + max_new} "
-                             f"exceeds per-sequence capacity "
-                             f"{self.width * self.page}")
         if rid is None:
             rid = self._next_rid
-        elif (rid in self.finished
+        elif (rid in self.finished or rid in self.outcomes
               or any(r.rid == rid for r in self.waiting)
               or any(s is not None and s.req.rid == rid
                      for s in self.slots)):
@@ -787,13 +1050,40 @@ class PagedServingEngine:
             # results in `finished`
             raise ValueError(f"request id {rid} is already in use")
         self._next_rid = max(self._next_rid, rid + 1)
+        self.counters["submitted"] += 1
+        if ttl_steps is None:
+            ttl_steps = self.default_ttl_steps
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        req = Request(rid, prompt, max_new, ttl_steps=ttl_steps,
+                      deadline_t=(None if deadline_s is None
+                                  else time.time() + deadline_s),
+                      submit_step=self._step_idx)
+        if self._needs_pages and len(prompt) + max_new > self.width * self.page:
+            # page-table capacity only binds layouts with KV layers; pure
+            # state-pool sequences are O(1) in length.  No amount of
+            # waiting makes this fit -> immediate structured rejection.
+            self._resolve(req, "rejected",
+                          detail=f"prompt+max_new = {len(prompt) + max_new} "
+                                 f"exceeds per-sequence capacity "
+                                 f"{self.width * self.page}")
+            return rid
+        if (self.max_waiting is not None
+                and len(self.waiting) >= self.max_waiting):
+            # bounded admission queue: shed load *now* with a backoff hint
+            # instead of growing the queue without bound
+            self._resolve(req, "rejected",
+                          detail=f"wait queue full "
+                                 f"({len(self.waiting)} waiting)",
+                          retry_after=self._retry_after_hint())
+            return rid
         if self._prefix is not None:
             # submit-time longest-cached-prefix probe (read-only: the
             # authoritative, LRU-touching lookup happens at admission,
             # when the slot — hence the shard — is known)
             self.counters["prefix_probe_tokens"] += max(
                 idx.probe(prompt) for idx in self._prefix)
-        self.waiting.append(Request(rid, prompt, max_new))
+        self.waiting.append(req)
         return rid
 
     @property
@@ -813,7 +1103,15 @@ class PagedServingEngine:
                             "prefix_hit_tokens", "prefix_probe_tokens",
                             "evicted_pages", "cow_copies",
                             "deduped_pages", "state_slot_allocs",
-                            "expired_page_frees")}
+                            "expired_page_frees",
+                            # robustness: outcome taxonomy (sums to
+                            # `submitted`) + fault/degradation telemetry
+                            "submitted", *OUTCOMES,
+                            "step_retries", "slots_quarantined",
+                            "scrubbed_pages",
+                            "straggler_steps", "injected_step_faults",
+                            "injected_nar_poisons",
+                            "injected_page_poisons")}
         d.update(self.counters)
         d["gather_fallbacks"] = (sum(GATHER_FALLBACKS.values())
                                  - self._gather_base)
@@ -866,20 +1164,50 @@ class PagedServingEngine:
         return self.table[:, :w]
 
     def _run_step(self, tokens: np.ndarray, num_new: np.ndarray,
-                  participants) -> np.ndarray:
-        """Run the fused step; returns the sampled token per slot
-        ([max_seqs] int32 — the step's only device->host transfer)."""
+                  participants):
+        """Run the fused step; returns (tokens, nar) — the sampled token
+        and the on-device NaR-detector flag per slot ([max_seqs] int32 /
+        bool, fetched in one transfer, so the happy path costs no extra
+        host sync).  A step that fails (InjectedFault before the device
+        call) is retried once against unchanged state; a repeat failure
+        quarantines the participants and returns (None, None)."""
+        poisoned: list[int] = []
+        if self._chaos is not None:
+            poisoned = self._chaos.poison_slots(self._step_idx, participants)
+        poison = np.zeros((self.max_seqs,), bool)
+        poison[poisoned] = True
         pt = jnp.asarray(self._table_view(participants))
         sl = jnp.asarray(self.seq_lens)
         nn = jnp.asarray(num_new)
-        toks, self.pages = self._step_fn(
-            self.params, jnp.asarray(tokens), self.pages, pt, sl, nn,
-            jnp.float32(self.temperature), jnp.int32(self._seed),
-            jnp.int32(self._step_idx))
+        for attempt in (0, 1):
+            try:
+                if self._chaos is not None:
+                    nap = self._chaos.straggle(self._step_idx, attempt)
+                    if nap > 0.0:
+                        self.counters["straggler_steps"] += 1
+                        time.sleep(nap)
+                    if self._chaos.step_fault(self._step_idx, attempt):
+                        self.counters["injected_step_faults"] += 1
+                        raise InjectedFault(
+                            f"injected device failure at step "
+                            f"{self._step_idx} attempt {attempt}")
+                toks, bad, self.pages = self._step_fn(
+                    self.params, jnp.asarray(tokens), self.pages, pt, sl, nn,
+                    jnp.float32(self.temperature), jnp.int32(self._seed),
+                    jnp.int32(self._step_idx), jnp.asarray(poison))
+                break
+            except InjectedFault:
+                if attempt == 0:
+                    self.counters["step_retries"] += 1
+                    continue
+                self._quarantine(participants)
+                return None, None
+        self.counters["injected_nar_poisons"] += len(poisoned)
         self._step_idx += 1
         self.seq_lens += num_new
         self._reclaim_expired()
-        return np.asarray(toks)
+        toks, bad = jax.device_get((toks, bad))
+        return np.asarray(toks), np.asarray(bad)
 
     def _reclaim_expired(self):
         """Free KV pages every token of which has slid out of the attention
@@ -905,16 +1233,34 @@ class PagedServingEngine:
                     self.table[i, j] = 0
                     self.counters["expired_page_frees"] += 1
 
+    def _page_in(self, i: int) -> bool:
+        """Allocate slot i's pages for its next write and run COW; a dry
+        pool (slot i alone exceeds its shard) resolves the request as
+        `rejected` instead of raising.  Returns False if the slot died."""
+        try:
+            self._ensure_pages(i, int(self.seq_lens[i])
+                               + (min(self.chunk, len(self.slots[i].req.prompt)
+                                      - self.slots[i].prefill_pos)
+                                  if self.slots[i].phase == "prefill" else 1))
+            self._maybe_cow(i)
+            return True
+        except PoolExhausted as e:
+            self._fail_slot(i, "rejected", detail=str(e))
+            return False
+
     def step(self) -> list[tuple[int, int]]:
         """One scheduler iteration; returns (rid, token) pairs emitted."""
-        # retire finished sequences, then fill freed slots from the queue
+        # retire finished sequences (before expiry: a request that is done
+        # resolves `completed` even if its deadline passed this instant),
+        # then cancel expired work, then fill freed slots from the queue
         for i, slot in enumerate(self.slots):
             if slot is not None and slot.done:
-                self.finished[slot.req.rid] = np.concatenate(
-                    [slot.req.prior, np.asarray(slot.generated, np.int32)])
+                self._resolve(slot.req, "completed",
+                              generated=slot.generated)
                 self._free_slot(i)
-                self.counters["finished"] += 1
+        self._expire_deadlines()
         self._admit()
+        self._maybe_poison_page()
 
         prefilling = [i for i, s in enumerate(self.slots)
                       if s is not None and s.phase == "prefill"]
@@ -926,13 +1272,9 @@ class PagedServingEngine:
             # (fully cached page-aligned prompt) must write into a private
             # copy, never the shared page.
             for i in prefilling:
-                s = self.slots[i]
-                if s is None:
+                if self.slots[i] is None:
                     continue
-                part_len = min(self.chunk,
-                               len(s.req.prompt) - s.prefill_pos)
-                self._ensure_pages(i, int(self.seq_lens[i]) + part_len)
-                self._maybe_cow(i)
+                self._page_in(i)
             alive = [i for i in prefilling if self.slots[i] is not None]
             if not alive:
                 return emitted
@@ -943,10 +1285,19 @@ class PagedServingEngine:
                 part = s.req.prompt[s.prefill_pos:s.prefill_pos + self.chunk]
                 tokens[i, :len(part)] = part
                 num_new[i] = len(part)
-            toks = self._run_step(tokens, num_new, alive)
+            toks, bad = self._run_step(tokens, num_new, alive)
+            if toks is None:
+                return emitted           # step failed twice: slots resolved
             for i in alive:
                 s = self.slots[i]
                 s.prefill_pos += int(num_new[i])
+                if bad[i]:
+                    # NaR reached this slot's logits: fail it before any
+                    # token is emitted or any page registers in the prefix
+                    # index (poisoned KV must never be shared)
+                    self._fail_slot(i, "failed_nar",
+                                    "NaR detected in output logits")
+                    continue
                 if s.phase == "decode":
                     tok = int(toks[i])
                     s.generated.append(tok)
@@ -962,8 +1313,7 @@ class PagedServingEngine:
             return emitted
         for i in decoding:
             if self.slots[i] is not None:
-                self._ensure_pages(i, int(self.seq_lens[i]) + 1)
-                self._maybe_cow(i)
+                self._page_in(i)
         decoding = [i for i in decoding if self.slots[i] is not None]
         if not decoding:
             return emitted
@@ -972,9 +1322,15 @@ class PagedServingEngine:
         for i in decoding:
             tokens[i, 0] = self.slots[i].next_token
             num_new[i] = 1
-        toks = self._run_step(tokens, num_new, decoding)
+        toks, bad = self._run_step(tokens, num_new, decoding)
+        if toks is None:
+            return emitted
         for i in decoding:
             s = self.slots[i]
+            if bad[i]:
+                self._fail_slot(i, "failed_nar",
+                                "NaR detected in output logits")
+                continue
             tok = int(toks[i])
             s.generated.append(tok)
             s.next_token = tok

@@ -1,0 +1,149 @@
+"""Deterministic fault injection for the serving engine (chaos harness).
+
+The paper's case for posits is *well-defined behavior*: one NaR pattern
+(1000...0) instead of the IEEE NaN/Inf zoo.  That guarantee is only worth
+anything if the system above the datapath treats NaR as a first-class
+signal — detects it, contains it to the request that produced it, and
+degrades gracefully instead of crashing or emitting garbage tokens.  This
+module is the harness that *proves* that: seeded injectors hooked into
+`PagedServingEngine`'s step path simulate the faults a fleet actually sees,
+and the chaos tests (tests/test_chaos_serving.py) assert the engine's
+contract under them:
+
+  * every submitted request resolves to exactly one structured outcome
+    (``completed | rejected | expired | failed_nar | failed_fault``) —
+    an oversubscribed drain under injected faults never raises;
+  * surviving requests' greedy tokens are bit-identical to a fault-free
+    run (faults are contained to the request they hit);
+  * the engine's outcome counters exactly account for every submission.
+
+Fault kinds (all decisions are pure functions of (seed, step, ...) — two
+runs with the same ChaosConfig inject the identical fault schedule):
+
+  step fault     — a simulated device failure: the step raises
+                   InjectedFault *before* the device call, so no state is
+                   consumed.  The engine retries once; a repeat failure
+                   fails the step's participants (``failed_fault``) and
+                   quarantines their slots.
+  NaR poison     — a NaR-poisoned activation: the jitted step overwrites
+                   one participating slot's last-position logits with NaN
+                   (what a NaR reaching the unembed would decode to) on
+                   device, exercising the engine's per-slot NaR detector.
+  page poison    — a bit-flipped posit KV page: a live, private,
+                   fully-written page is overwritten with the NaR pattern
+                   (NaN for float pools).  The owning slot's next attention
+                   read propagates NaN to its logits only — pages are
+                   per-sequence — so the NaR detector fails that request
+                   and nothing else.
+  straggler      — a slow step: the scheduler sleeps before dispatch,
+                   which is what makes request deadlines/TTLs bind.
+
+The injector never touches engine internals; the engine asks it questions
+at fixed points and applies the answers through its normal fault paths, so
+the same paths cover *real* faults (a genuinely non-finite logit fails the
+request the same way an injected one does).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """A simulated device-step failure (raised before the device call, so
+    the step can be retried against unchanged state)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded fault schedule.  Probabilities are per decision point; the
+    draw for each decision is keyed by (seed, step, salt), never by call
+    order, so the schedule is reproducible across runs and unaffected by
+    how many questions the engine asks."""
+    seed: int = 0
+    p_step_fault: float = 0.0    # per step *attempt*: simulated device fail
+    p_nar_poison: float = 0.0    # per participating slot: NaN'd logits
+    p_page_poison: float = 0.0   # per step: one private KV page -> NaR
+    p_straggle: float = 0.0      # per step attempt: sleep before dispatch
+    straggle_s: float = 0.002    # straggler sleep duration (seconds)
+    max_injections: int | None = None   # total budget across kinds
+
+
+# stable salts so adding a new fault kind never perturbs existing draws
+_SALT = {"step_fault": 1, "nar_poison": 2, "page_poison": 3, "straggle": 4}
+
+
+class ChaosInjector:
+    """Deterministic injector over a ChaosConfig.
+
+    ``injected`` counts what was actually injected, by kind — the engine
+    mirrors these into its stats() so a drain's fault schedule is visible
+    next to the outcomes it caused."""
+
+    def __init__(self, cfg: ChaosConfig):
+        self.cfg = cfg
+        self.injected: collections.Counter = collections.Counter()
+
+    # ---- seeded decisions ------------------------------------------------
+    def _rng(self, *key: int) -> np.random.Generator:
+        return np.random.default_rng((self.cfg.seed,) + tuple(
+            int(k) & 0x7FFFFFFF for k in key))
+
+    def _budget_left(self) -> bool:
+        return (self.cfg.max_injections is None
+                or sum(self.injected.values()) < self.cfg.max_injections)
+
+    def _hit(self, p: float, *key: int) -> bool:
+        if p <= 0.0 or not self._budget_left():
+            return False
+        return bool(self._rng(*key).random() < p)
+
+    # ---- questions the engine asks ---------------------------------------
+    def step_fault(self, step_idx: int, attempt: int) -> bool:
+        """Should this (step, attempt) fail before the device call?"""
+        if self._hit(self.cfg.p_step_fault, _SALT["step_fault"], step_idx,
+                     attempt):
+            self.injected["step_faults"] += 1
+            return True
+        return False
+
+    def poison_slots(self, step_idx: int, participants) -> list[int]:
+        """Which participating slots get NaN'd logits this step (drawn
+        independently per slot, keyed by global slot id)?"""
+        out = []
+        for i in participants:
+            if self._hit(self.cfg.p_nar_poison, _SALT["nar_poison"],
+                         step_idx, i):
+                self.injected["nar_poisons"] += 1
+                out.append(i)
+        return out
+
+    def page_poison(self, step_idx: int) -> bool:
+        """Should one live private page be NaR-flipped before this step?
+        (The engine picks the victim page — lowest active slot with a
+        fully-written, unshared, uncached page — so containment is
+        checkable.)"""
+        if self._hit(self.cfg.p_page_poison, _SALT["page_poison"], step_idx):
+            self.injected["page_poisons"] += 1
+            return True
+        return False
+
+    def straggle(self, step_idx: int, attempt: int) -> float:
+        """Seconds to sleep before dispatching this attempt (0 = healthy)."""
+        if self._hit(self.cfg.p_straggle, _SALT["straggle"], step_idx,
+                     attempt):
+            self.injected["stragglers"] += 1
+            return self.cfg.straggle_s
+        return 0.0
+
+
+def as_injector(chaos) -> ChaosInjector | None:
+    """Engine-ctor convenience: None | ChaosConfig | ChaosInjector."""
+    if chaos is None or isinstance(chaos, ChaosInjector):
+        return chaos
+    if isinstance(chaos, ChaosConfig):
+        return ChaosInjector(chaos)
+    raise TypeError(f"chaos must be ChaosConfig/ChaosInjector, got "
+                    f"{type(chaos).__name__}")

@@ -44,6 +44,13 @@ from repro.core.types import PositConfig
 GARBAGE_PAGE = 0   # page index reserved for masked/invalid writes
 
 
+class PoolExhausted(RuntimeError):
+    """A page allocation found nothing free, nothing evictable and nothing
+    preemptible.  The engine converts this into a structured ``rejected``
+    outcome for the request that needed the page — it must never escape a
+    drain as an unhandled exception (tests/test_chaos_serving.py)."""
+
+
 def reclaimable_pages(seq_len: int, window: int, page_size: int) -> int:
     """How many leading pages of a sequence have slid *entirely* out of a
     `window`-token attention window at length `seq_len` (post-append).
@@ -201,6 +208,28 @@ def copy_layer_pages(pages: dict, src, dst, stacked: bool = False) -> dict:
         return {"k_pages": PositArray(cp(kp.bits), kp.cfg),
                 "v_pages": PositArray(cp(vp.bits), vp.cfg)}
     return {"k_pages": cp(kp), "v_pages": cp(vp)}
+
+
+def poison_layer_pages(pages: dict, pg, stacked: bool = False) -> dict:
+    """Overwrite page `pg` of one layer's pools with the posit NaR pattern
+    (1000...0 per element; NaN for float pools) — the chaos harness's
+    bit-flipped-page injection.  A poisoned page decodes to NaN, so the
+    owning sequence's next attention read propagates NaN into *its* logits
+    (and only its — pages are per-sequence unless prefix-shared, and the
+    injector targets unshared pages), tripping the engine's NaR detector."""
+    def po(buf, fill):
+        if stacked:
+            return buf.at[:, pg].set(fill)
+        return buf.at[pg].set(fill)
+
+    kp, vp = pages["k_pages"], pages["v_pages"]
+    if isinstance(kp, PositArray):
+        # NaR as a signed storage value: the bit pattern 1000...0 is
+        # -2^(n-1) in two's complement (int8/int16-safe, unlike 2^(n-1))
+        nar = -(1 << (kp.cfg.n - 1))
+        return {"k_pages": PositArray(po(kp.bits, nar), kp.cfg),
+                "v_pages": PositArray(po(vp.bits, nar), vp.cfg)}
+    return {"k_pages": po(kp, jnp.nan), "v_pages": po(vp, jnp.nan)}
 
 
 def init_layer_pages(num_pages: int, n_kv: int, page_size: int, head_dim: int,

@@ -117,10 +117,22 @@ def _compute_grads(params, batch, cfg: ModelConfig, accum_steps: int):
     return loss_sum * inv, {}, grads
 
 
+def _poison_grads(grads, poison):
+    """Chaos hook: where `poison` (traced bool scalar) is set, replace
+    every gradient leaf with NaN — what a posit NaR entering the gradient
+    stream decodes to — so adamw's non-finite guard trips.  A per-leaf
+    where-select, so poison=False keeps the gradients bit-identical."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.where(poison, jnp.asarray(jnp.nan, g.dtype), g), grads)
+
+
 def train_step(params, opt_state, batch, cfg: ModelConfig,
-               opt_cfg: adamw.OptConfig, accum_steps: int = 1):
+               opt_cfg: adamw.OptConfig, accum_steps: int = 1,
+               poison=None):
     """One optimization step.  Pure; jit/pjit-able."""
     loss, metrics, grads = _compute_grads(params, batch, cfg, accum_steps)
+    if poison is not None:
+        grads = _poison_grads(grads, poison)
     params, opt_state, opt_metrics = adamw.apply_updates(
         params, grads, opt_state, opt_cfg)
     metrics = dict(metrics, loss=loss, **opt_metrics)
@@ -154,8 +166,13 @@ def _mesh_grad_norm(grads, pspecs):
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh=None, *,
-                    accum_steps: int = 1, donate: bool = True):
-    """Build the jitted train step: `step(params, opt_state, batch)`.
+                    accum_steps: int = 1, donate: bool = True,
+                    chaos_nar: bool = False):
+    """Build the jitted train step: `step(params, opt_state, batch)` —
+    or, with chaos_nar=True, `step(params, opt_state, batch, poison)`
+    where `poison` is a bool scalar that NaNs the gradient tree on device
+    (the trainer's fault-injection hook; the default build carries no
+    poison plumbing at all, so the production step is untouched).
 
     mesh None — the single-device path: plain jit with params/opt-state
     donated (the two largest buffers alias in place; at 235B+f32 moments a
@@ -180,9 +197,14 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh=None, *,
     silently diverge — those archs raise and should train DP/FSDP.
     """
     if mesh is None:
-        def step(params, opt_state, batch):
-            return train_step(params, opt_state, batch, cfg, opt_cfg,
-                              accum_steps)
+        if chaos_nar:
+            def step(params, opt_state, batch, poison):
+                return train_step(params, opt_state, batch, cfg, opt_cfg,
+                                  accum_steps, poison=poison)
+        else:
+            def step(params, opt_state, batch):
+                return train_step(params, opt_state, batch, cfg, opt_cfg,
+                                  accum_steps)
         return jax.jit(step, donate_argnums=(0, 1) if donate else ())
 
     from jax.experimental.shard_map import shard_map
@@ -201,7 +223,7 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh=None, *,
                 f"blocks={bad}.  Use a (ndev, 1) data-parallel mesh.")
     wire = cfg.policy.grads if cfg.policy is not None else None
 
-    def body(pspecs, params, opt_state, batch):
+    def body(pspecs, params, opt_state, batch, poison=None):
         with tensor_parallel("model", ntp):
             loss, metrics, grads = _compute_grads(params, batch, cfg,
                                                   accum_steps)
@@ -211,21 +233,48 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh=None, *,
             grads = compressed_grad_sync(grads, "data", wire)
             loss = jax.lax.pmean(loss, "data")
             metrics = {k: jax.lax.pmean(v, "data") for k, v in metrics.items()}
+        if poison is not None:
+            # chaos: the NaN reaches the guard through the grad norm,
+            # exactly like a real NaR-poisoned gradient would
+            grads = _poison_grads(grads, poison)
         gn = _mesh_grad_norm(grads, pspecs)
         params, opt_state, opt_metrics = adamw.apply_updates(
             params, grads, opt_state, opt_cfg, grad_norm=gn)
         return params, opt_state, dict(metrics, loss=loss, **opt_metrics)
 
-    def step(params, opt_state, batch):
+    def _specs(params, opt_state, batch):
         pspecs = sharding.train_param_pspecs(params, mesh)
         ospecs = sharding.opt_state_pspecs(opt_state, pspecs, mesh)
         bspecs = jax.tree_util.tree_map(
             lambda x: P("data") if getattr(x, "ndim", 0) else P(), batch)
-        return shard_map(
-            functools.partial(body, pspecs), mesh=mesh,
-            in_specs=(pspecs, ospecs, bspecs),
-            out_specs=(pspecs, ospecs, P()),
-            check_rep=False,
-        )(params, opt_state, batch)
+        return pspecs, ospecs, bspecs
+
+    def _backfill(opt_state):
+        # pre-nar_skips checkpoints: backfill the guard counter so the
+        # output opt_state tree (which always carries it) matches out_specs
+        opt_state = dict(opt_state)
+        opt_state.setdefault("nar_skips", jnp.zeros((), jnp.int32))
+        return opt_state
+
+    if chaos_nar:
+        def step(params, opt_state, batch, poison):
+            opt_state = _backfill(opt_state)
+            pspecs, ospecs, bspecs = _specs(params, opt_state, batch)
+            return shard_map(
+                functools.partial(body, pspecs), mesh=mesh,
+                in_specs=(pspecs, ospecs, bspecs, P()),
+                out_specs=(pspecs, ospecs, P()),
+                check_rep=False,
+            )(params, opt_state, batch, poison)
+    else:
+        def step(params, opt_state, batch):
+            opt_state = _backfill(opt_state)
+            pspecs, ospecs, bspecs = _specs(params, opt_state, batch)
+            return shard_map(
+                functools.partial(body, pspecs), mesh=mesh,
+                in_specs=(pspecs, ospecs, bspecs),
+                out_specs=(pspecs, ospecs, P()),
+                check_rep=False,
+            )(params, opt_state, batch)
 
     return jax.jit(step, donate_argnums=(0, 1) if donate else ())

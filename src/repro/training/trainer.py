@@ -53,13 +53,21 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
                ckpt_dir: str | None = None,
                policy: RestartPolicy = RestartPolicy(),
                log_every: int = 10, seed: int = 0, verbose: bool = True,
-               mesh=None, accum_steps: int = 1):
+               mesh=None, accum_steps: int = 1,
+               chaos_nar_steps=None):
     """Runs (or resumes) training; returns the metrics history.
 
     mesh: a ("data","model") jax Mesh routes every step through the
     shard_map training path (params/opt-state/batch device_put to their
     PartitionSpecs up front so the donated jit re-uses the buffers in
     place); None keeps the single-device donated jit.
+
+    chaos_nar_steps: fault injection — a collection of step indices whose
+    gradient tree is NaN'd on device before the optimizer, exercising the
+    non-finite (NaR) guard in adamw.apply_updates: the update is skipped,
+    opt_state["nar_skips"] increments (checkpointed, so resume keeps the
+    count), and the log line reports it.  None builds the production step
+    with no poison plumbing at all.
     """
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt_state = adamw.init_state(params, opt_cfg)
@@ -68,13 +76,25 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
     if ckpt_dir:
         step, restored = store.restore_latest(
             ckpt_dir, {"params": params, "opt": opt_state})
+        if step is None and "nar_skips" in opt_state:
+            # pre-nar_skips checkpoint: its opt tree has one leaf fewer;
+            # retry against the legacy layout and backfill the counter
+            legacy = {k: v for k, v in opt_state.items()
+                      if k != "nar_skips"}
+            step, restored = store.restore_latest(
+                ckpt_dir, {"params": params, "opt": legacy})
+            if step is not None:
+                restored["opt"]["nar_skips"] = jnp.zeros((), jnp.int32)
         if step is not None:
             params, opt_state = restored["params"], restored["opt"]
             start_step = step
             if verbose:
                 print(f"[trainer] resumed from step {step}")
 
-    step_fn = make_train_step(cfg, opt_cfg, mesh, accum_steps=accum_steps)
+    chaos_set = (None if chaos_nar_steps is None
+                 else frozenset(int(s) for s in chaos_nar_steps))
+    step_fn = make_train_step(cfg, opt_cfg, mesh, accum_steps=accum_steps,
+                              chaos_nar=chaos_set is not None)
     if mesh is not None:
         from repro.distributed import sharding
         pspecs = sharding.train_param_pspecs(params, mesh)
@@ -90,7 +110,13 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
     for step in range(start_step, num_steps):
         batch = global_batch_at(step, data_cfg)
         with StepWatchdog(policy.step_timeout_s):
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if chaos_set is None:
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch)
+            else:
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch,
+                    jnp.asarray(step in chaos_set))
         if step % log_every == 0 or step == num_steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step
@@ -105,9 +131,11 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
             history.append(m)
             if verbose:
                 fb = f" fallbacks {m['fallbacks']}" if m["fallbacks"] else ""
+                nar = (f" nar_skips {int(m['nar_skips'])}"
+                       if m.get("nar_skips") else "")
                 print(f"[trainer] step {step:5d} loss {m['loss']:.4f} "
                       f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "
-                      f"{m['steps_per_s']:.2f} steps/s{fb}")
+                      f"{m['steps_per_s']:.2f} steps/s{nar}{fb}")
         if ckpt_dir and (step + 1) % policy.ckpt_every == 0:
             store.save(ckpt_dir, step + 1,
                        {"params": params, "opt": opt_state},

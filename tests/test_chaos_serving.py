@@ -1,0 +1,278 @@
+"""Chaos drains: the serving engine's graceful-degradation contract under
+seeded fault injection (serving/faults.py).
+
+The contract (engine docstring, ISSUE 9):
+  * an oversubscribed drain with injected device failures, NaR-poisoned
+    activations, bit-flipped posit KV pages, stragglers and expiring
+    deadlines never raises — every submission resolves to exactly one of
+    completed | rejected | expired | failed_nar | failed_fault;
+  * faults are contained: every surviving request's greedy tokens are
+    bit-identical to a fault-free run, and a failed request's partial
+    tokens are a clean prefix of its fault-free tokens;
+  * stats() outcome counters exactly account for all submissions.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.types import P8_2, P16_2
+from repro.models.transformer import ModelConfig
+from repro.quant.policy import PositPolicy
+from repro.serving.engine import OUTCOMES, PagedServingEngine
+from repro.serving.faults import ChaosConfig, ChaosInjector
+
+MAX_DRAIN_STEPS = 2000
+
+
+def _cfg(pcfg):
+    return ModelConfig(name="tst", n_layers=2, d_model=32, n_heads=4,
+                       n_kv=2, d_ff=64, vocab=50,
+                       policy=PositPolicy(kv_cache=pcfg))
+
+
+def _params(cfg):
+    from repro.models.transformer import init_params
+    return init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _requests(cfg, n, max_new=6, seed=7):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab, int(rng.integers(3, 14))), max_new)
+            for _ in range(n)]
+
+
+def _drain(eng):
+    """Step until quiescent; the step budget turns a hang into a failure."""
+    for _ in range(MAX_DRAIN_STEPS):
+        if not (eng.waiting or eng.active):
+            return
+        eng.step()
+    raise AssertionError("drain did not terminate")
+
+
+def _reference(cfg, params, reqs):
+    """Fault-free tokens per rid from a generously provisioned engine."""
+    eng = PagedServingEngine(params, cfg, max_seqs=4, page_size=4,
+                             table_width=8, prefill_chunk=8)
+    return eng.run(list(reqs))
+
+
+def _check_accounting(eng, n_submitted):
+    s = eng.stats()
+    assert s["submitted"] == n_submitted
+    assert sum(s[k] for k in OUTCOMES) == n_submitted, s
+    assert set(eng.outcomes) == set(range(n_submitted))
+    for rid, o in eng.outcomes.items():
+        assert o.status in OUTCOMES, o
+    return s
+
+
+@pytest.mark.parametrize("pcfg", [None, P16_2, P8_2],
+                         ids=["float", "p16", "p8"])
+def test_oversubscribed_chaos_drain_contract(pcfg):
+    """2x-oversubscribed drain under every fault kind at once: never
+    raises, counters account for everything, survivors bit-identical."""
+    cfg = _cfg(pcfg)
+    params = _params(cfg)
+    reqs = _requests(cfg, 8)
+    ref = _reference(cfg, params, reqs)
+    assert len(ref) == len(reqs)          # the oracle run completes fully
+
+    chaos = ChaosConfig(seed=5, p_step_fault=0.05, p_nar_poison=0.08,
+                        p_page_poison=0.10, p_straggle=0.2,
+                        straggle_s=0.0)
+    eng = PagedServingEngine(params, cfg, max_seqs=2, page_size=4,
+                             table_width=8, prefill_chunk=8,
+                             chaos=chaos)
+    # oversubscribed: 8 requests over 2 slots; a couple with a TTL tight
+    # enough to expire under stragglers/retries
+    for j, (prompt, max_new) in enumerate(reqs):
+        eng.submit(prompt, max_new,
+                   ttl_steps=12 if j in (5, 6) else None)
+    _drain(eng)
+    s = _check_accounting(eng, len(reqs))
+
+    # the schedule must have actually injected something, else the test
+    # silently degrades to the fault-free case
+    injected = (s["injected_step_faults"] + s["injected_nar_poisons"]
+                + s["injected_page_poisons"])
+    assert injected > 0, s
+
+    for rid, o in eng.outcomes.items():
+        if o.status == "completed":
+            np.testing.assert_array_equal(o.tokens, ref[rid])
+        else:
+            # containment: whatever was generated before the fault is a
+            # clean prefix of the fault-free greedy stream
+            assert len(o.tokens) < len(ref[rid]) or o.status != "completed"
+            np.testing.assert_array_equal(
+                np.asarray(o.tokens), ref[rid][:len(o.tokens)])
+
+
+def test_nar_poison_fails_only_poisoned_request():
+    """One injected NaR-poisoned activation: exactly one failed_nar, every
+    other request completes bit-identically."""
+    cfg = _cfg(None)
+    params = _params(cfg)
+    reqs = _requests(cfg, 4)
+    ref = _reference(cfg, params, reqs)
+
+    chaos = ChaosConfig(seed=1, p_nar_poison=1.0, max_injections=1)
+    eng = PagedServingEngine(params, cfg, max_seqs=2, page_size=4,
+                             table_width=8, prefill_chunk=8, chaos=chaos)
+    eng.run(list(reqs))
+    s = _check_accounting(eng, len(reqs))
+    assert s["failed_nar"] == 1
+    assert s["completed"] == len(reqs) - 1
+    assert s["injected_nar_poisons"] == 1
+    for rid, o in eng.outcomes.items():
+        if o.status == "completed":
+            np.testing.assert_array_equal(o.tokens, ref[rid])
+        else:
+            assert "NaR" in o.detail
+            np.testing.assert_array_equal(
+                np.asarray(o.tokens), ref[rid][:len(o.tokens)])
+
+
+@pytest.mark.parametrize("pcfg", [None, P16_2, P8_2],
+                         ids=["float", "p16", "p8"])
+def test_page_poison_contained_to_victim(pcfg):
+    """One bit-flipped (NaR'd) private KV page: the owning request trips
+    the on-device NaR detector; nobody else is touched, and the freed
+    poisoned page can be recycled without poisoning its next owner (the
+    attention masks are where-selects, not additive biases)."""
+    cfg = _cfg(pcfg)
+    params = _params(cfg)
+    reqs = _requests(cfg, 6, max_new=8)
+    ref = _reference(cfg, params, reqs)
+
+    chaos = ChaosConfig(seed=3, p_page_poison=1.0, max_injections=1)
+    # prefix cache off: cached pages are shared by design and the injector
+    # only targets private pages, so a cache-on run may find no victim
+    eng = PagedServingEngine(params, cfg, max_seqs=2, page_size=4,
+                             table_width=8, prefill_chunk=8, chaos=chaos,
+                             prefix_cache=False)
+    eng.run(list(reqs))
+    s = _check_accounting(eng, len(reqs))
+    assert s["injected_page_poisons"] == 1
+    assert s["failed_nar"] == 1, s
+    assert s["completed"] == len(reqs) - 1
+    for rid, o in eng.outcomes.items():
+        if o.status == "completed":
+            np.testing.assert_array_equal(o.tokens, ref[rid])
+
+
+def test_step_fault_retries_then_quarantines():
+    """p_step_fault=1 with a budget of 2: the first step fails, the retry
+    fails, participants fail loudly and their slots quarantine; with the
+    budget spent the drain then completes the rest on clean steps --
+    unless every slot is quarantined, in which case the queue rejects
+    instead of hanging.  Either way: structured outcomes, no exception."""
+    cfg = _cfg(None)
+    params = _params(cfg)
+    reqs = _requests(cfg, 6)
+    chaos = ChaosConfig(seed=2, p_step_fault=1.0, max_injections=2)
+    eng = PagedServingEngine(params, cfg, max_seqs=2, page_size=4,
+                             table_width=8, prefill_chunk=8, chaos=chaos)
+    eng.run(list(reqs))
+    s = _check_accounting(eng, len(reqs))
+    assert s["injected_step_faults"] == 2
+    assert s["step_retries"] == 1
+    assert s["failed_fault"] == 2          # both step-0 participants
+    assert s["slots_quarantined"] == 2
+    # every slot was quarantined (max_seqs=2): the rest must have been
+    # rejected at admission rather than left hanging
+    assert s["rejected"] == len(reqs) - 2
+    for o in eng.outcomes.values():
+        if o.status == "failed_fault":
+            assert "quarantined" in o.detail
+
+
+def test_bounded_queue_rejects_with_retry_after():
+    """max_waiting bounds admission: overflow submissions resolve as
+    rejected (with a retry-after hint) instead of queueing forever."""
+    cfg = _cfg(None)
+    params = _params(cfg)
+    reqs = _requests(cfg, 6)
+    eng = PagedServingEngine(params, cfg, max_seqs=2, page_size=4,
+                             table_width=8, prefill_chunk=8, max_waiting=2)
+    for prompt, max_new in reqs:
+        eng.submit(prompt, max_new)
+    assert len(eng.waiting) == 2
+    _drain(eng)
+    s = _check_accounting(eng, len(reqs))
+    assert s["rejected"] == 4
+    assert s["completed"] == 2
+    for o in eng.outcomes.values():
+        if o.status == "rejected":
+            assert o.retry_after_steps is not None
+            assert o.retry_after_steps >= 1
+            assert len(o.tokens) == 0
+
+
+def test_ttl_expiry_returns_resources():
+    """A TTL tighter than the work: requests expire with partial tokens
+    and every page goes back to the pool (no leak), after which the
+    engine still serves new work."""
+    cfg = _cfg(None)
+    params = _params(cfg)
+    eng = PagedServingEngine(params, cfg, max_seqs=2, page_size=4,
+                             table_width=8, prefill_chunk=8)
+    free0 = len(eng.free_pages)
+    # max_new chosen to fit the per-sequence capacity (else the submit
+    # resolves `rejected` before the TTL can ever bind)
+    prompts = _requests(cfg, 2, max_new=18)
+    for prompt, max_new in prompts:
+        eng.submit(prompt, max_new, ttl_steps=6)
+    _drain(eng)
+    s = _check_accounting(eng, 2)
+    assert s["expired"] == 2
+    for o in eng.outcomes.values():
+        assert len(o.tokens) < 18
+    # pages returned (cached prefix pages stay resident by design)
+    assert len(eng.free_pages) + eng.cached_pages == free0
+    # the engine is still healthy: fresh work completes
+    rid = eng.submit(prompts[0][0], 3)
+    _drain(eng)
+    assert eng.outcomes[rid].status == "completed"
+
+
+def test_over_capacity_submit_rejects_structurally():
+    """prompt+max_new beyond the per-sequence page capacity used to raise
+    ValueError; it now resolves as a structured rejection (malformed
+    input -- empty prompt, bad rid -- still raises)."""
+    cfg = _cfg(None)
+    params = _params(cfg)
+    eng = PagedServingEngine(params, cfg, max_seqs=2, page_size=4,
+                             table_width=4)
+    rid = eng.submit(np.arange(10) % cfg.vocab, 1000)
+    assert eng.outcomes[rid].status == "rejected"
+    assert "capacity" in eng.outcomes[rid].detail
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros((0,), np.int32), 4)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(4) % cfg.vocab, 0)
+
+
+def test_chaos_schedule_deterministic():
+    """Two injectors over the same config answer identically regardless of
+    call order/count; a different seed answers differently somewhere."""
+    cfg = ChaosConfig(seed=9, p_step_fault=0.3, p_nar_poison=0.3,
+                      p_page_poison=0.3, p_straggle=0.3)
+    a, b = ChaosInjector(cfg), ChaosInjector(cfg)
+    # b asks extra questions first: per-decision keying must not care
+    for t in range(50):
+        b.page_poison(t)
+    sched_a = [(a.step_fault(t, 0), sorted(a.poison_slots(t, range(4))))
+               for t in range(40)]
+    sched_b = [(b.step_fault(t, 0), sorted(b.poison_slots(t, range(4))))
+               for t in range(40)]
+    assert sched_a == sched_b
+    c = ChaosInjector(ChaosConfig(seed=10, p_step_fault=0.3,
+                                  p_nar_poison=0.3, p_page_poison=0.3,
+                                  p_straggle=0.3))
+    sched_c = [(c.step_fault(t, 0), sorted(c.poison_slots(t, range(4))))
+               for t in range(40)]
+    assert sched_c != sched_a

@@ -97,9 +97,11 @@ def test_sharded_engine_rejects_indivisible_shapes():
 
 # ---- on-device sampling contract -----------------------------------------
 def test_decode_step_transfers_only_token_ids():
-    """The jitted step's outputs are the [max_seqs] int32 sampled tokens
-    plus the (donated, device-resident) page pools — no [max_seqs, vocab]
-    logits leaf exists for the host to pull (the ISSUE-3 acceptance row)."""
+    """The jitted step's outputs are the [max_seqs] int32 sampled tokens,
+    the [max_seqs] bool NaR flags, and the (donated, device-resident) page
+    pools — no [max_seqs, vocab] logits leaf exists for the host to pull
+    (the ISSUE-3 acceptance row; still O(max_seqs) after the ISSUE-9
+    on-device NaR detector rode its flags onto the same transfer)."""
     from repro.models.transformer import init_paged_pages
     cfg = _cfg()
     max_seqs, page, W = 4, 4, 8
@@ -116,9 +118,11 @@ def test_decode_step_transfers_only_token_ids():
         jax.ShapeDtypeStruct((max_seqs,), jnp.int32),
         jax.ShapeDtypeStruct((), jnp.float32),
         jax.ShapeDtypeStruct((), jnp.int32),
-        jax.ShapeDtypeStruct((), jnp.int32))
-    toks, new_pages = out
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((max_seqs,), jnp.bool_))
+    toks, bad, new_pages = out
     assert toks.shape == (max_seqs,) and toks.dtype == jnp.int32
+    assert bad.shape == (max_seqs,) and bad.dtype == jnp.bool_
     for leaf in jax.tree_util.tree_leaves(new_pages):
         assert leaf.ndim >= 4, leaf.shape     # page pools only, no logits
 
@@ -209,9 +213,10 @@ _SUBPROCESS = textwrap.dedent("""
         for r in res_ref:
             assert np.array_equal(res[r], res_ref[r]), (shape, r)
 
-        # a decode step returns [max_seqs] int32 token ids and page pools
-        # only — no logits-shaped leaf ever crosses to the host
-        toks, pages = jax.eval_shape(
+        # a decode step returns [max_seqs] int32 token ids, [max_seqs]
+        # bool NaR flags and page pools only — no logits-shaped leaf ever
+        # crosses to the host
+        toks, bad, pages = jax.eval_shape(
             eng._step_fn, params,
             jax.ShapeDtypeStruct((8, 1), jnp.int32), eng.pages,
             jax.ShapeDtypeStruct((8, 8), jnp.int32),
@@ -219,8 +224,10 @@ _SUBPROCESS = textwrap.dedent("""
             jax.ShapeDtypeStruct((8,), jnp.int32),
             jax.ShapeDtypeStruct((), jnp.float32),
             jax.ShapeDtypeStruct((), jnp.int32),
-            jax.ShapeDtypeStruct((), jnp.int32))
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((8,), jnp.bool_))
         assert toks.shape == (8,) and toks.dtype == jnp.int32
+        assert bad.shape == (8,) and bad.dtype == jnp.bool_
         for leaf in jax.tree_util.tree_leaves(pages):
             assert leaf.ndim >= 4, leaf.shape
 

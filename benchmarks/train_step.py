@@ -21,6 +21,18 @@ invariant, same as tier-1 asserts).
     PYTHONPATH=src python -m benchmarks.train_step [--smoke]
 
 Writes experiments/BENCH_training.json (nightly CI artifact).
+
+--elastic instead measures the fault-tolerance stack (nightly elastic
+lane) and writes experiments/BENCH_elastic.json:
+
+    ckpt_stall_ms:   per-checkpoint train-loop stall, sync store.save vs
+                     AsyncCheckpointStore (the async number is just the
+                     device->host snapshot + any backpressure block);
+    kill_recovery:   a supervised 3-worker group with one worker
+                     SIGKILLed mid-run — restart latency (group death ->
+                     first post-restart heartbeat) and lost-work steps
+                     (steps past the last checkpoint that the restarted
+                     generation had to redo).
 """
 from __future__ import annotations
 
@@ -131,6 +143,94 @@ def bench(smoke: bool = False, posits=("off", "p8", "p16")) -> dict:
     return res
 
 
+ELASTIC_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "BENCH_elastic.json")
+
+
+def _elastic_stall_legs(smoke: bool):
+    """Per-checkpoint stall: sync store.save vs async snapshot+enqueue,
+    same model, same loop (training.elastic, num_hosts=1)."""
+    import tempfile
+    from repro.data.pipeline import DataConfig
+    from repro.distributed.fault_tolerance import RestartPolicy
+    from repro.models.transformer import ModelConfig
+    from repro.optim.adamw import OptConfig
+    from repro.training.elastic import elastic_train_loop
+
+    dims = (dict(n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+                 vocab=128) if smoke else
+            dict(n_layers=4, d_model=256, n_heads=8, n_kv=4, d_ff=768,
+                 vocab=2048))
+    cfg = ModelConfig("bench-elastic", **dims)
+    steps = 8 if smoke else 20
+    every = 2 if smoke else 4
+    opt_cfg = OptConfig(lr_peak=1e-3, warmup_steps=2, total_steps=steps)
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=32 if smoke else 128,
+                          global_batch=4)
+    policy = RestartPolicy(ckpt_every=every, keep=2)
+
+    legs = {}
+    for leg, use_async in (("sync", False), ("async", True)):
+        with tempfile.TemporaryDirectory() as ck:
+            stalls_s = []
+            elastic_train_loop(cfg, opt_cfg, data_cfg, steps,
+                               ckpt_dir=ck, policy=policy,
+                               async_ckpt=use_async, verbose=False,
+                               ckpt_stalls_out=stalls_s)
+        stalls = [s * 1e3 for s in stalls_s]
+        legs[leg] = {"stall_ms_mean": round(sum(stalls) / len(stalls), 3),
+                     "stall_ms_max": round(max(stalls), 3),
+                     "n_ckpts": len(stalls)}
+    return legs
+
+
+def _elastic_kill_recovery(smoke: bool):
+    """Supervised kill run: SIGKILL 1 of 3 workers mid-run, measure the
+    restart latency and redone (lost-work) steps from the GenRecords."""
+    import tempfile
+    from repro.distributed.fault_tolerance import RestartPolicy
+    from repro.launch.supervisor import supervise_training
+
+    steps = 6 if smoke else 12
+    with tempfile.TemporaryDirectory() as tmp:
+        out = supervise_training(
+            "tiny", steps, os.path.join(tmp, "ck"),
+            os.path.join(tmp, "run"), workers=3,
+            policy=RestartPolicy(ckpt_every=2, step_timeout_s=120,
+                                 backoff_s=0.1),
+            global_batch=4, seq_len=32, seed=0,
+            chaos_kill=f"1:{steps // 2}", verbose=False)
+    if out.status != "completed" or len(out.generations) < 2:
+        return {"status": out.status, "error": out.error}
+    g0, g1 = out.generations[0], out.generations[1]
+    return {"status": out.status,
+            "restarts": out.restarts,
+            "workers": f"{g0.workers}->{g1.workers}",
+            # group death -> restarted gen's first observed heartbeat
+            "restart_latency_s": round(g1.started_t - g0.ended_t, 3)
+            if g1.first_step is not None else None,
+            # steps the restarted gen redid (past the resumed checkpoint)
+            "lost_work_steps": (g0.last_step - g1.first_step
+                                if None not in (g0.last_step, g1.first_step)
+                                else None)}
+
+
+def bench_elastic(smoke: bool = False) -> dict:
+    import jax
+    res = {"smoke": smoke, "backend": jax.default_backend(),
+           "note": ("ckpt_stall_ms: caller-visible per-checkpoint stall; "
+                    "async = device->host snapshot only (write+fsync on "
+                    "the background thread).  kill_recovery: 3-worker "
+                    "supervised group, 1 SIGKILLed mid-run"),
+           "ckpt_stall_ms": _elastic_stall_legs(smoke),
+           "kill_recovery": _elastic_kill_recovery(smoke)}
+    os.makedirs(os.path.dirname(ELASTIC_PATH), exist_ok=True)
+    with open(ELASTIC_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"wrote {os.path.normpath(ELASTIC_PATH)}")
+    return res
+
+
 def run(report):
     """benchmarks.run entry point."""
     t0 = time.time()
@@ -141,8 +241,15 @@ def run(report):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--elastic", action="store_true",
+                    help="measure the fault-tolerance stack instead "
+                         "(ckpt stalls sync vs async, kill recovery) -> "
+                         "BENCH_elastic.json")
     args = ap.parse_args()
-    print(json.dumps(bench(smoke=args.smoke), indent=1))
+    if args.elastic:
+        print(json.dumps(bench_elastic(smoke=args.smoke), indent=1))
+    else:
+        print(json.dumps(bench(smoke=args.smoke), indent=1))
 
 
 if __name__ == "__main__":

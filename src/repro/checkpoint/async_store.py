@@ -1,0 +1,111 @@
+"""Asynchronous checkpointing: snapshot synchronously, publish in the
+background — the train loop stalls for a device→host copy instead of a
+full write+hash+fsync cycle.
+
+Contract (the elastic-training acceptance row in ISSUE 10):
+
+  * save(step, tree) snapshots device→host *synchronously* — an actual
+    copy (np.array, copy=True semantics), never a view of the device
+    buffer: the trainer's donated jit reuses those buffers on the very
+    next step, and a zero-copy CPU-backend view would hand the writer
+    thread garbage.  The caller-visible stall is this copy (+ a possible
+    backpressure block), recorded per save in `stalls_s`.
+  * the background thread runs checkpoint.store.save verbatim — write,
+    fsync every leaf + manifest, atomic .tmp→final rename, fsync the
+    parent dir, GC by valid steps.  A crash mid-async-write therefore
+    leaves only a .tmp dir, which restore_latest already skips (the
+    corrupted-tail fallback covers torn leaves).
+  * the in-flight queue is bounded: a save() issued while `max_inflight`
+    snapshots are still being written BLOCKS until a slot frees — memory
+    stays bounded and no checkpoint is ever silently dropped.
+  * wait() is the loop-exit barrier: it returns only when every enqueued
+    snapshot is published (or re-raises the writer thread's failure).
+    Background write errors never vanish — they surface on the next
+    save()/wait()/close().
+
+Used by training/trainer.py and training/elastic.py under
+--async-ckpt; stall sync-vs-async is measured in BENCH_elastic.json
+(benchmarks/train_step.py --elastic).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+
+
+class AsyncCheckpointStore:
+    def __init__(self, ckpt_dir: str, *, keep: int = 3,
+                 max_inflight: int = 2):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=max_inflight)
+        self._exc: BaseException | None = None
+        self._closed = False
+        self.stalls_s: list[float] = []   # caller-visible stall per save()
+        self.published: list[int] = []    # steps the writer thread finished
+        self._thread = threading.Thread(target=self._drain,
+                                        name="async-ckpt", daemon=True)
+        self._thread.start()
+
+    # -- trainer-facing API -------------------------------------------------
+    def save(self, step: int, tree) -> float:
+        """Snapshot `tree` to host memory and enqueue it for background
+        publishing; returns the caller-visible stall in seconds."""
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointStore is closed")
+        self._raise_pending()
+        t0 = time.perf_counter()
+        snap = jax.tree_util.tree_map(lambda x: np.array(x), tree)
+        self._q.put((int(step), snap))    # blocks on overflow — never drops
+        stall = time.perf_counter() - t0
+        self.stalls_s.append(stall)
+        return stall
+
+    def wait(self):
+        """Barrier: block until every enqueued snapshot is on disk."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self):
+        """Drain, stop the writer thread, surface any pending error."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(None)
+            self._thread.join()
+        self._raise_pending()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- writer thread ------------------------------------------------------
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, snap = item
+                store.save(self.ckpt_dir, step, snap, keep=self.keep)
+                self.published.append(step)
+            except BaseException as e:   # kept; re-raised at the barrier
+                self._exc = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise RuntimeError(
+                f"async checkpoint write failed: {exc!r}") from exc

@@ -44,7 +44,19 @@ def _leaf_digest(arr: np.ndarray) -> str:
     return h.hexdigest()
 
 
+def _fsync_dir(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    """Durable atomic save: every leaf and the manifest are fsync'd before
+    the .tmp -> final rename, and the parent dir is fsync'd after, so a
+    published step survives a host crash, not just a process kill (the
+    async store runs this exact function on its background thread)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     if os.path.exists(final):        # idempotent: step already published
@@ -60,7 +72,10 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
     for i, leaf in enumerate(leaves):
         arr = np.asarray(leaf)
         fn = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fn), arr)
+        with open(os.path.join(tmp, fn), "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         digest = _leaf_digest(arr)
         h.update(digest.encode())               # combined hash over digests
         manifest["leaves"].append({"file": fn, "dtype": str(arr.dtype),
@@ -69,16 +84,34 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
     manifest["hash"] = h.hexdigest()
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     os.replace(tmp, final)                       # atomic publish
+    _fsync_dir(ckpt_dir)
 
     _gc(ckpt_dir, keep)
     return final
 
 
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(d for d in os.listdir(ckpt_dir)
-                   if d.startswith("step_") and not d.endswith(".tmp"))
-    for d in steps[:-keep]:
+    """Prune to the newest `keep` *valid* steps.
+
+    Only directories that at least carry a manifest count toward `keep`
+    (restore's full-hash validation stays too expensive to run per GC):
+    a manifest-less partial dir — a hand-mangled or half-unpacked step —
+    must neither consume a keep slot nor shadow older valid steps, and
+    the newest valid step must never be deleted even when newer partial
+    or .tmp dirs exist above it.  Partial/.tmp dirs themselves are left
+    alone (save() reclaims its own .tmp; anything else is evidence worth
+    keeping for a human)."""
+    if keep <= 0:
+        return
+    valid = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")))
+    for d in valid[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 

@@ -54,9 +54,30 @@ def global_batch_at(step: int, cfg: DataConfig):
     return {"tokens": toks}
 
 
+def host_row_bounds(global_batch: int, host_id: int, num_hosts: int):
+    """[lo, hi) rows of the global batch owned by `host_id`.
+
+    Balanced partition: the first `global_batch % num_hosts` hosts take one
+    extra row, so the host slices tile the *whole* global batch in host
+    order for ANY host count — the elastic-shrink invariant.  (The old
+    `global_batch // num_hosts` slicing silently dropped the remainder
+    rows whenever the batch stopped dividing, so a 4→3 worker shrink
+    would have trained on a different global batch sequence.)"""
+    if not 1 <= num_hosts:
+        raise ValueError(f"num_hosts must be >= 1, got {num_hosts}")
+    if not 0 <= host_id < num_hosts:
+        raise ValueError(f"host_id {host_id} outside [0, {num_hosts})")
+    base, rem = divmod(global_batch, num_hosts)
+    lo = host_id * base + min(host_id, rem)
+    return lo, lo + base + (1 if host_id < rem else 0)
+
+
 def host_batch_at(step: int, cfg: DataConfig, host_id: int, num_hosts: int):
-    """Per-host slice of the global batch (elastic-safe: derived, not stored)."""
+    """Per-host slice of the global batch (elastic-safe: derived, not
+    stored).  Concatenating the slices for hosts 0..num_hosts-1 always
+    reproduces global_batch_at(step) exactly, for any num_hosts — so a
+    run that shrinks 4→3 workers (or grows back 3→4) keeps consuming the
+    bit-identical global batch sequence."""
     full = global_batch_at(step, cfg)
-    per = cfg.global_batch // num_hosts
-    return jax.tree_util.tree_map(
-        lambda x: x[host_id * per:(host_id + 1) * per], full)
+    lo, hi = host_row_bounds(cfg.global_batch, host_id, num_hosts)
+    return jax.tree_util.tree_map(lambda x: x[lo:hi], full)

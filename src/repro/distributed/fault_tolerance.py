@@ -1,50 +1,69 @@
-"""Fault tolerance, straggler mitigation, elasticity — the runbook layer.
+"""Fault tolerance, straggler mitigation, elasticity — implemented and
+exercised in this repo (CPU container), not just designed for hardware.
 
-What is implemented and exercised in this repo (CPU container):
   * checkpoint/restart: atomic manifest-verified checkpoints with full
-    per-leaf sha256 digests (checkpoint/store.py) + a seekable pipeline
-    (data/pipeline.py) make the (params, opt_state, step) triple the full
-    training state; the trainer (training/trainer.py) auto-resumes from
-    the newest valid step, skipping corrupted/partial directories.
+    per-leaf sha256 digests (checkpoint/store.py: fsync'd leaves/manifest,
+    .tmp -> atomic rename publish, GC that counts only *valid* steps) + a
+    seekable pipeline (data/pipeline.py) make the (params, opt_state, step)
+    triple the full training state; the trainer auto-resumes from the
+    newest valid step, skipping corrupted/partial directories.
     tests/test_fault_tolerance.py kills a run mid-flight (subprocess
     SIGKILL) and asserts bit-identical continuation, fallback past a
-    corrupted step dir, and that a flipped byte deep in a leaf (past the
-    old 4 KiB prefix hash) is caught.
-  * NaR/non-finite containment: a non-finite gradient norm skips the
-    optimizer update and increments the checkpointed
-    opt_state["nar_skips"] counter (optim/adamw.py, guard selected
-    per-leaf so the happy path is bit-identical); the serving engine
-    detects NaR in output logits on device and fails only the poisoned
-    request (serving/engine.py, chaos harness in serving/faults.py,
-    drains exercised by tests/test_chaos_serving.py).
+    corrupted step dir, and that a flipped byte deep in a leaf is caught.
+  * async checkpointing: checkpoint/async_store.AsyncCheckpointStore
+    snapshots device->host synchronously (a copy, so donated buffers can
+    be reused immediately), then writes + fsyncs + atomically publishes on
+    a background thread behind a bounded in-flight queue (block on
+    overflow, never drop) with a wait() barrier at loop exit.  A crash
+    mid-async-write leaves only a .tmp dir, which restore already skips.
+    Exercised by tests/test_elastic.py and BENCH_elastic.json (per-ckpt
+    train-loop stall, sync vs async).
+  * failure detection + restart: launch/supervisor.py spawns the worker
+    process group (jax.distributed over localhost TCP on this container),
+    monitors per-worker heartbeat files (step + phase + timestamp,
+    atomically renamed), and on a worker death (signal), straggler
+    timeout, or startup hang kills the whole group and re-execs it with
+    the data axis shrunk to the survivors — exponential backoff between
+    restarts, RestartPolicy.max_restarts bounded, ending in a structured
+    RunOutcome (completed | exhausted_restarts | failed) instead of a
+    raised exception.  tests/test_supervisor.py SIGKILLs and straggles
+    workers mid-run and asserts the shrunk resume is bit-identical.
+  * straggler mitigation: synchronous SPMD cannot drop stragglers
+    mid-collective, so the supervisor's heartbeat watchdog
+    (--step-timeout) treats a stale heartbeat as a failure; among the
+    timed-out workers the one stuck at the earliest (step, phase) is the
+    straggler (its peers have already reached the exchange phase and are
+    merely blocked on it), and the group restarts without it.  The
+    in-process StepWatchdog below covers the single-process trainer.
   * elastic data-parallel resize: per-host batches are *derived*
-    (host_batch_at(step, host_id, num_hosts)), so a restart with a different
-    data-axis size resumes the same global batch sequence; param shardings
-    are re-fit by sharding.param_pspecs against the new mesh (dims that no
+    (host_batch_at(step, host_id, num_hosts), balanced partition), so any
+    worker count consumes the bit-identical global batch sequence, and
+    training/elastic.py computes gradients per-row and reduces them in
+    canonical global row order — the update is bitwise invariant to how
+    rows are grouped onto workers, which is what makes a 4→3 shrunk
+    resume reproduce an uninterrupted run exactly.  Param shardings are
+    re-fit by sharding.param_pspecs against the new mesh (dims that no
     longer divide fall back to replication rather than failing).
 
-What is designed-for and documented (needs real multi-host hardware):
-  * failure detection: on TPU pods, jax.distributed heartbeats surface node
-    loss as a NotFoundError on the next collective; the launcher
-    (launch/train.py --restart-on-failure) re-execs the process group and
-    resumes from the last checkpoint.  MTBF math: at 1000 nodes / 3-year
-    node MTBF, expect ~1 failure/day -> checkpoint every K steps such that
-    K * step_time << 1 day / overhead budget; default --ckpt-every covers
-    <=2% lost work at 30 s steps.
-  * straggler mitigation: synchronous SPMD cannot drop stragglers
-    mid-collective; mitigation is (a) the launcher's per-step watchdog
-    (--step-timeout) which treats a >p99.9 step as a failure and restarts
-    without the slow host, shrinking the data axis (elastic resume), and
-    (b) the pipeline's derived batches, which make that shrink consistent.
-  * hierarchical sync: cross-pod gradient traffic is pre-reduced in-pod and
-    posit-compressed (collectives.cross_pod_grad_sync), halving the bytes
-    crossing the slowest links.
+MTBF math (why --ckpt-every matters): at 1000 nodes / 3-year node MTBF,
+expect ~1 failure/day; lost work per failure averages ckpt_every/2 steps,
+so checkpoint every K steps with K * step_time << MTBF/overhead budget —
+the default covers <=2% lost work at 30 s steps.  BENCH_elastic.json
+measures the other side of the tradeoff (per-checkpoint stall), which the
+async store collapses to the device->host snapshot time.
+
+Hierarchical sync (real multi-pod hardware only): cross-pod gradient
+traffic is pre-reduced in-pod and posit-compressed
+(collectives.cross_pod_grad_sync), halving the bytes crossing the slowest
+links.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import signal
+import threading
 import time
 
 
@@ -53,19 +72,43 @@ class RestartPolicy:
     ckpt_every: int = 50
     keep: int = 3
     max_restarts: int = 100
-    step_timeout_s: float | None = None   # straggler watchdog (launcher-level)
+    step_timeout_s: float | None = None   # straggler watchdog (supervisor)
+    # supervisor knobs (launch/supervisor.py)
+    min_workers: int = 1          # shrink floor: fewer survivors -> failed
+    startup_timeout_s: float = 300.0   # spawn -> first heartbeat deadline
+    backoff_s: float = 0.5        # restart backoff: backoff_s * 2**(n-1)
+    backoff_max_s: float = 30.0   # ... capped here
 
 
 class StepWatchdog:
-    """Treat a stuck/straggling step as a failure (SIGALRM -> exception)."""
+    """Treat a stuck/straggling step as a failure (SIGALRM -> exception).
+
+    Context-manager hygiene: the previous SIGALRM handler AND any
+    in-flight itimer are saved on entry and restored on exit (an enclosing
+    watchdog/alarm keeps working; its clock is paused for the duration of
+    this block).  SIGALRM can only be delivered to the main thread, so
+    arming from any other thread raises a clear error up front instead of
+    dying inside signal.signal.
+    """
 
     def __init__(self, timeout_s: float | None):
         self.timeout_s = timeout_s
+        self._prev_handler = None
+        self._prev_timer = (0.0, 0.0)
+        self._t0 = 0.0
 
     def __enter__(self):
         if self.timeout_s:
-            signal.signal(signal.SIGALRM, self._fire)
-            signal.setitimer(signal.ITIMER_REAL, self.timeout_s)
+            if threading.current_thread() is not threading.main_thread():
+                raise RuntimeError(
+                    "StepWatchdog uses SIGALRM, which only the main thread "
+                    "may arm; run the training loop on the main thread or "
+                    "use the supervisor's process-level --step-timeout "
+                    "heartbeat watchdog instead")
+            self._prev_handler = signal.signal(signal.SIGALRM, self._fire)
+            self._prev_timer = signal.setitimer(signal.ITIMER_REAL,
+                                                self.timeout_s)
+            self._t0 = time.monotonic()
         return self
 
     def _fire(self, signum, frame):
@@ -74,4 +117,56 @@ class StepWatchdog:
     def __exit__(self, *exc):
         if self.timeout_s:
             signal.setitimer(signal.ITIMER_REAL, 0.0)
+            signal.signal(signal.SIGALRM, self._prev_handler)
+            remaining, interval = self._prev_timer
+            if remaining > 0.0:
+                # re-arm the enclosing timer with the time it had left when
+                # we preempted it; if this block already overran that
+                # budget, fire (almost) immediately under its own handler
+                left = remaining - (time.monotonic() - self._t0)
+                signal.setitimer(signal.ITIMER_REAL, max(left, 1e-6),
+                                 interval)
         return False
+
+
+# --------------------------------------------------------------------------
+# heartbeats: the supervisor's failure/straggler detector input
+# --------------------------------------------------------------------------
+# phase order within a step; the straggler among a set of mutually-stale
+# workers is the one stuck at the smallest (step, phase rank) — its peers
+# have advanced to the exchange and are merely blocked waiting for it
+PHASES = ("step", "sync", "done")
+PHASE_RANK = {p: i for i, p in enumerate(PHASES)}
+
+
+class Heartbeat:
+    """Atomically-renamed per-worker heartbeat file: {host_id, step, phase,
+    t}.  Readers (the supervisor) never observe a torn write — the json is
+    written to <path>.tmp and os.replace'd over the live file."""
+
+    def __init__(self, path: str, host_id: int):
+        self.path = path
+        self.host_id = host_id
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def beat(self, step: int, phase: str = "step"):
+        if phase not in PHASE_RANK:
+            raise ValueError(f"unknown heartbeat phase {phase!r}")
+        rec = {"host_id": self.host_id, "step": int(step), "phase": phase,
+               "t": time.time()}
+        tmp = f"{self.path}.tmp.{self.host_id}"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        os.replace(tmp, self.path)
+
+    def done(self, step: int):
+        self.beat(step, "done")
+
+
+def read_heartbeat(path: str):
+    """The worker's latest heartbeat record, or None (not yet written)."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None

@@ -165,6 +165,10 @@ def main():
     outcome_line = " ".join(f"{k}={stats.get(k, 0)}" for k in OUTCOMES)
     print(f"[serve] outcomes: submitted={stats.get('submitted', 0)} "
           f"{outcome_line}")
+    print(f"[serve] robustness: straggler_steps="
+          f"{stats.get('straggler_steps', 0)} "
+          f"step_latency_ms p50={stats.get('step_latency_p50_ms', 0.0):.1f} "
+          f"p99={stats.get('step_latency_p99_ms', 0.0):.1f}")
     if results:
         first = results[min(results)]
         print(f"[serve] rid {min(results)}: {first[:12]}")

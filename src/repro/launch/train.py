@@ -9,10 +9,17 @@ On this CPU container it drives the same code path on a 1x1 mesh (used by
 examples/ and the integration tests).  The mesh/sharding configuration is
 identical to what launch/dryrun.py proves compiles for the production mesh.
 
-Fault tolerance: --restart-on-failure re-enters the train loop after any
-exception, resuming from the newest valid checkpoint (the loop itself
-checkpoints every --ckpt-every steps and the data pipeline is seekable);
---step-timeout arms the straggler watchdog (fault_tolerance.StepWatchdog).
+Fault tolerance: --restart-on-failure hands the run to the elastic
+process-group supervisor (launch/supervisor.py) — the trainer runs in
+child processes that are *re-execed* on crash or straggler timeout,
+resuming from the newest valid checkpoint (checkpoints every --ckpt-every
+steps; the data pipeline is seekable); --workers N spawns an N-process
+elastic data-parallel group (jax.distributed over localhost TCP) that
+shrinks to the survivors on a worker death; --step-timeout arms the
+supervisor's heartbeat straggler watchdog (process-level), or the
+in-process fault_tolerance.StepWatchdog on the plain single-process path;
+--async-ckpt moves checkpoint writes off the training thread
+(checkpoint/async_store.py).
 
 XLA flags for real hardware (latency-hiding overlap of the FSDP gathers —
 DESIGN.md §5) are exported here so runs inherit them:
@@ -56,7 +63,37 @@ def main():
     ap.add_argument("--restart-on-failure", action="store_true")
     ap.add_argument("--max-restarts", type=int, default=10)
     ap.add_argument("--step-timeout", type=float, default=None)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="elastic data-parallel worker processes "
+                         "(>1 implies the supervisor path)")
+    ap.add_argument("--min-workers", type=int, default=1)
+    ap.add_argument("--async-ckpt", action="store_true",
+                    help="background checkpoint writes (bounded queue)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.workers > 1 or args.restart_on_failure:
+        # elastic supervisor path: the trainer runs in child processes
+        # that are re-execed (and the group shrunk) on failure
+        if not args.ckpt_dir:
+            ap.error("--restart-on-failure/--workers>1 need --ckpt-dir "
+                     "(restarts resume from it)")
+        from repro.distributed.fault_tolerance import RestartPolicy
+        from repro.launch.supervisor import supervise_training
+        policy = RestartPolicy(ckpt_every=args.ckpt_every,
+                               max_restarts=args.max_restarts,
+                               step_timeout_s=args.step_timeout,
+                               min_workers=args.min_workers)
+        out = supervise_training(
+            args.arch, args.steps, args.ckpt_dir,
+            os.path.join(args.ckpt_dir, "run"), workers=args.workers,
+            policy=policy, global_batch=args.global_batch,
+            seq_len=args.seq_len, lr=args.lr, seed=args.seed,
+            smoke=args.smoke, async_ckpt=args.async_ckpt, posit=args.posit)
+        print(f"[launch] supervisor outcome: {out.status} "
+              f"({out.restarts} restart(s), {out.final_workers} final "
+              f"worker(s))" + (f" — {out.error}" if out.error else ""))
+        raise SystemExit(0 if out.ok else 1)
 
     if args.host_devices:
         # append (not prepend): XLA applies the *last* duplicate flag, so an
@@ -98,21 +135,10 @@ def main():
         from repro.launch.mesh import make_serving_mesh
         mesh = make_serving_mesh(data=args.dp, model=args.tp)
 
-    attempts = 0
-    while True:
-        try:
-            train_loop(cfg, opt_cfg, data_cfg, args.steps,
-                       ckpt_dir=args.ckpt_dir, policy=rp, mesh=mesh,
-                       accum_steps=args.accum_steps)
-            break
-        except KeyboardInterrupt:
-            raise
-        except Exception as e:
-            attempts += 1
-            if not args.restart_on_failure or attempts > args.max_restarts:
-                raise
-            print(f"[launch] step failed ({type(e).__name__}: {e}); "
-                  f"restart {attempts}/{args.max_restarts} from latest ckpt")
+    train_loop(cfg, opt_cfg, data_cfg, args.steps,
+               ckpt_dir=args.ckpt_dir, policy=rp, mesh=mesh,
+               accum_steps=args.accum_steps, seed=args.seed,
+               async_ckpt=args.async_ckpt)
 
 
 if __name__ == "__main__":

@@ -1121,6 +1121,12 @@ class PagedServingEngine:
                                     - self._rec_base)
         d["free_pages"] = sum(p.n_free for p in self._pools)
         d["cached_pages"] = self.cached_pages
+        if self._step_lat_s:
+            lat = np.percentile(np.asarray(self._step_lat_s), [50, 99])
+            d["step_latency_p50_ms"] = float(lat[0]) * 1e3
+            d["step_latency_p99_ms"] = float(lat[1]) * 1e3
+        else:
+            d["step_latency_p50_ms"] = d["step_latency_p99_ms"] = 0.0
         return d
 
     def reset_stats(self):
@@ -1129,6 +1135,7 @@ class PagedServingEngine:
         from repro.kernels.ops import RECURRENT_FALLBACKS
         from repro.models.moe import DENSE_MOE_FALLBACKS
         self.counters.clear()
+        self._step_lat_s: collections.deque = collections.deque(maxlen=4096)
         self._gather_base = sum(GATHER_FALLBACKS.values())
         self._moe_base = sum(DENSE_MOE_FALLBACKS.values())
         self._rec_base = sum(RECURRENT_FALLBACKS.values())
@@ -1171,6 +1178,7 @@ class PagedServingEngine:
         host sync).  A step that fails (InjectedFault before the device
         call) is retried once against unchanged state; a repeat failure
         quarantines the participants and returns (None, None)."""
+        t_step0 = time.perf_counter()
         poisoned: list[int] = []
         if self._chaos is not None:
             poisoned = self._chaos.poison_slots(self._step_idx, participants)
@@ -1207,6 +1215,9 @@ class PagedServingEngine:
         self.seq_lens += num_new
         self._reclaim_expired()
         toks, bad = jax.device_get((toks, bad))
+        # end-to-end wall time of the fused step (injected straggler sleeps
+        # included — that skew is exactly what the p99 is for)
+        self._step_lat_s.append(time.perf_counter() - t_step0)
         return np.asarray(toks), np.asarray(bad)
 
     def _reclaim_expired(self):

@@ -1,0 +1,250 @@
+"""Elastic-exact data-parallel training: the worker loop behind
+launch/supervisor.py.
+
+The correctness problem with elastic resume is not resuming — it is that
+a shrunk world must keep producing the *same parameters*.  Gradients of a
+mean loss are a sum over per-example gradients, and floating-point
+addition is not associative: summing 4 per-host partials gives different
+bits than summing 3, so a 4→3 worker shrink that naively all-reduces
+partial gradients silently forks the training trajectory and "bit-
+identical resume" becomes unverifiable.
+
+This loop makes the update bitwise invariant to how rows are grouped onto
+workers:
+
+  * each worker computes PER-ROW gradients for its balanced slice of the
+    global batch (data.pipeline.host_row_bounds — the slices tile the
+    global batch for any worker count), via lax.map over [1, S]
+    microbatches, padded to the global ceil(B/H) row budget;
+  * the padded per-row stacks are exchanged with one
+    multihost_utils.process_allgather (ordered by process index), so
+    every worker holds every row's gradient in canonical global row
+    order;
+  * the reduction is a sequential fori_loop over global rows, with
+    padding rows skipped by a where-select (which leaves the accumulator
+    bit-untouched — adding a zero would already flip -0.0 to +0.0).
+
+The per-row gradient values themselves do not depend on which worker
+computed them (same jitted row function, same shapes), and the ordered
+sum does not depend on the grouping — so 4 workers, 3 workers, and a
+single process all produce bit-identical parameters from the same seed,
+which is exactly what tests/test_supervisor.py pins end-to-end through a
+SIGKILL + shrunk restart.
+
+Cost: per-row gradients forgo batched matmul efficiency — this is the
+deliberate price of regroup-invariance, paid at microbatch granularity
+(production systems pick a fixed microgroup size that divides every
+allowed world size; row granularity is the always-valid special case and
+keeps this CPU-scale rig simple).  Everything outside the row loop
+(optimizer, norm, schedule) is replicated deterministic compute.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.checkpoint.async_store import AsyncCheckpointStore
+from repro.data.pipeline import DataConfig, host_batch_at, host_row_bounds
+from repro.distributed.fault_tolerance import Heartbeat, RestartPolicy
+from repro.models.transformer import ModelConfig, init_params
+from repro.optim import adamw
+from repro.training.train_step import lm_loss
+
+
+def max_host_rows(global_batch: int, num_hosts: int) -> int:
+    """Padded per-host row budget: ceil(B / H), uniform across hosts so
+    the all-gathered stacks have one static shape per world size."""
+    return -(-global_batch // num_hosts)
+
+
+def valid_row_mask(global_batch: int, num_hosts: int) -> np.ndarray:
+    """[num_hosts * maxR] bool: which entries of the flattened gathered
+    stack are real rows (in canonical global row order) vs padding."""
+    max_r = max_host_rows(global_batch, num_hosts)
+    mask = np.zeros((num_hosts, max_r), bool)
+    for h in range(num_hosts):
+        lo, hi = host_row_bounds(global_batch, h, num_hosts)
+        mask[h, :hi - lo] = True
+    return mask.reshape(-1)
+
+
+def make_row_grad_fn(cfg: ModelConfig):
+    """jit: (params, rows [R, S+1]) -> (losses [R], grads stacked [R, ...]).
+    One value_and_grad per [1, S] microbatch under lax.map — the
+    per-iteration computation (and therefore each row's gradient bits) is
+    independent of R, i.e. of the worker count."""
+
+    def one(params, row):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, {"tokens": row[None]}),
+            has_aux=True)(params)
+        return loss, g
+
+    return jax.jit(lambda params, rows:
+                   jax.lax.map(lambda r: one(params, r), rows))
+
+
+def make_ordered_update_fn(cfg: ModelConfig, opt_cfg: adamw.OptConfig):
+    """jit: ordered masked reduction over the gathered per-row gradient
+    stacks + the AdamW update.  The fori_loop walks global row order
+    0..N-1 sequentially; invalid (padding) entries leave the accumulator
+    bit-untouched via where-select, so the result depends only on the
+    valid rows' values and order — never on the host grouping."""
+
+    def update(params, opt_state, losses, grads, valid, global_batch):
+        def body(i, acc):
+            g_acc, l_acc = acc
+            take = valid[i]
+            g_acc = jax.tree_util.tree_map(
+                lambda a, s: jnp.where(take, a + s[i].astype(jnp.float32), a),
+                g_acc, grads)
+            return g_acc, jnp.where(take, l_acc + losses[i], l_acc)
+
+        zeros = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape[1:], jnp.float32), grads)
+        g_sum, l_sum = jax.lax.fori_loop(
+            0, valid.shape[0], body, (zeros, jnp.zeros((), jnp.float32)))
+        inv = 1.0 / global_batch
+        g_mean = jax.tree_util.tree_map(lambda g: g * inv, g_sum)
+        params, opt_state, m = adamw.apply_updates(params, g_mean,
+                                                   opt_state, opt_cfg)
+        return params, opt_state, dict(m, loss=l_sum * inv)
+
+    return jax.jit(update, static_argnames=("global_batch",))
+
+
+def _gather_rows(losses, grads, num_hosts: int):
+    """All hosts' padded per-row stacks, flattened to canonical global row
+    order ([H*maxR, ...]).  Ordered by process index — process_allgather
+    stacks host h's rows at slot h, matching host_row_bounds."""
+    if num_hosts == 1:
+        return losses, grads
+    from jax.experimental import multihost_utils
+    losses, grads = multihost_utils.process_allgather((losses, grads))
+    flat = lambda x: jnp.reshape(jnp.asarray(x), (-1,) + x.shape[2:])
+    return flat(losses), jax.tree_util.tree_map(flat, grads)
+
+
+def elastic_train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+                       data_cfg: DataConfig, num_steps: int, *,
+                       ckpt_dir: str | None = None,
+                       policy: RestartPolicy = RestartPolicy(),
+                       host_id: int = 0, num_hosts: int = 1,
+                       heartbeat: Heartbeat | None = None,
+                       async_ckpt: bool = False, seed: int = 0,
+                       log_every: int = 10, verbose: bool = True,
+                       chaos_kill_at: int | None = None,
+                       chaos_straggle_at: int | None = None,
+                       chaos_straggle_s: float = 30.0,
+                       ckpt_stalls_out: list | None = None):
+    """Runs (or resumes) one worker of an elastic data-parallel group.
+
+    Every host executes the same loop on its derived host_batch_at slice;
+    host 0 is the checkpoint writer (all hosts hold bit-identical state,
+    so one writer suffices and restore is symmetric).  num_hosts == 1 is
+    the uninterrupted-reference special case: no collectives at all, same
+    math.  Chaos hooks (the supervisor's generation-0 fault injection):
+    chaos_kill_at SIGKILLs this process at the top of that step;
+    chaos_straggle_at sleeps chaos_straggle_s before computing it.
+
+    Returns (params, opt_state, history) like training.trainer.train_loop.
+    """
+    B = data_cfg.global_batch
+    max_r = max_host_rows(B, num_hosts)
+    lo, hi = host_row_bounds(B, host_id, num_hosts)
+
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw.init_state(params, opt_cfg)
+    start_step = 0
+    if ckpt_dir:
+        step, restored = store.restore_latest(
+            ckpt_dir, {"params": params, "opt": opt_state})
+        if step is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = step
+            if verbose:
+                print(f"[elastic h{host_id}] resumed from step {step} "
+                      f"({num_hosts} hosts)", flush=True)
+
+    row_grads = make_row_grad_fn(cfg)
+    update = make_ordered_update_fn(cfg, opt_cfg)
+    valid = jnp.asarray(valid_row_mask(B, num_hosts))
+
+    writer = (host_id == 0 and ckpt_dir is not None)
+    astore = (AsyncCheckpointStore(ckpt_dir, keep=policy.keep)
+              if writer and async_ckpt else None)
+
+    def _save(step, tree):
+        if astore is not None:
+            return astore.save(step, tree)
+        t0 = time.perf_counter()
+        store.save(ckpt_dir, step, tree, keep=policy.keep)
+        return time.perf_counter() - t0
+
+    history, step_s = [], []
+    # caller-visible per-checkpoint stall seconds (the elastic bench reads
+    # these to compare sync vs async checkpointing)
+    ckpt_stalls = ckpt_stalls_out if ckpt_stalls_out is not None else []
+    try:
+        for step in range(start_step, num_steps):
+            if heartbeat is not None:
+                heartbeat.beat(step, "step")
+            if chaos_kill_at is not None and step == chaos_kill_at:
+                os.kill(os.getpid(), signal.SIGKILL)   # node death, induced
+            if chaos_straggle_at is not None and step == chaos_straggle_at:
+                time.sleep(chaos_straggle_s)
+            t0 = time.perf_counter()
+            rows = host_batch_at(step, data_cfg, host_id,
+                                 num_hosts)["tokens"]
+            pad = max_r - rows.shape[0]
+            if pad:
+                rows = jnp.concatenate(
+                    [rows, jnp.zeros((pad, rows.shape[1]), rows.dtype)])
+            losses, grads = row_grads(params, rows)
+            if heartbeat is not None:
+                heartbeat.beat(step, "sync")
+            losses, grads = _gather_rows(losses, grads, num_hosts)
+            params, opt_state, metrics = update(params, opt_state, losses,
+                                                grads, valid,
+                                                global_batch=B)
+            jax.block_until_ready(params)
+            step_s.append(time.perf_counter() - t0)
+            if step % log_every == 0 or step == num_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["step_s"] = step_s[-1]
+                history.append(m)
+                if verbose and host_id == 0:
+                    print(f"[elastic h0/{num_hosts}] step {step:5d} "
+                          f"loss {m['loss']:.4f} gnorm {m['grad_norm']:.3f} "
+                          f"{m['step_s'] * 1e3:.0f} ms", flush=True)
+            if writer and (step + 1) % policy.ckpt_every == 0:
+                ckpt_stalls.append(
+                    _save(step + 1, {"params": params, "opt": opt_state}))
+        if writer:
+            ckpt_stalls.append(
+                _save(num_steps, {"params": params, "opt": opt_state}))
+        if astore is not None:
+            astore.wait()
+    finally:
+        if astore is not None:
+            astore.close()
+    if num_hosts > 1:
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices("elastic_loop_done")
+    if heartbeat is not None:
+        heartbeat.done(num_steps)
+    if verbose and host_id == 0 and step_s:
+        lat = np.asarray(step_s) * 1e3
+        print(f"[elastic h0/{num_hosts}] done: {len(step_s)} steps, "
+              f"step_ms p50={np.percentile(lat, 50):.0f} "
+              f"p99={np.percentile(lat, 99):.0f}, "
+              f"ckpt stalls {[round(s * 1e3, 1) for s in ckpt_stalls]} ms",
+              flush=True)
+    return params, opt_state, history

@@ -54,7 +54,7 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
                policy: RestartPolicy = RestartPolicy(),
                log_every: int = 10, seed: int = 0, verbose: bool = True,
                mesh=None, accum_steps: int = 1,
-               chaos_nar_steps=None):
+               chaos_nar_steps=None, async_ckpt: bool = False):
     """Runs (or resumes) training; returns the metrics history.
 
     mesh: a ("data","model") jax Mesh routes every step through the
@@ -68,6 +68,11 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
     opt_state["nar_skips"] increments (checkpointed, so resume keeps the
     count), and the log line reports it.  None builds the production step
     with no poison plumbing at all.
+
+    async_ckpt: checkpoint through AsyncCheckpointStore — the loop stalls
+    only for the device->host snapshot; write+fsync+publish happen on a
+    background thread behind a bounded queue, with a wait() barrier before
+    returning so no enqueued checkpoint is lost on normal exit.
     """
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt_state = adamw.init_state(params, opt_cfg)
@@ -103,6 +108,18 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
             opt_state, sharding.to_shardings(
                 sharding.opt_state_pspecs(opt_state, pspecs, mesh), mesh))
 
+    astore = None
+    if ckpt_dir and async_ckpt:
+        from repro.checkpoint.async_store import AsyncCheckpointStore
+        astore = AsyncCheckpointStore(ckpt_dir, keep=policy.keep)
+
+    def _save(at_step):
+        tree = {"params": params, "opt": opt_state}
+        if astore is not None:
+            astore.save(at_step, tree)
+        else:
+            store.save(ckpt_dir, at_step, tree, keep=policy.keep)
+
     history = []
     t0 = time.time()
     t_log, s_log = t0, start_step
@@ -137,10 +154,12 @@ def train_loop(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
                       f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "
                       f"{m['steps_per_s']:.2f} steps/s{nar}{fb}")
         if ckpt_dir and (step + 1) % policy.ckpt_every == 0:
-            store.save(ckpt_dir, step + 1,
-                       {"params": params, "opt": opt_state},
-                       keep=policy.keep)
+            _save(step + 1)
     if ckpt_dir:
-        store.save(ckpt_dir, num_steps, {"params": params, "opt": opt_state},
-                   keep=policy.keep)
+        _save(num_steps)
+    if astore is not None:
+        try:
+            astore.wait()
+        finally:
+            astore.close()
     return params, opt_state, history

@@ -1,0 +1,381 @@
+"""Elastic-exactness invariants + async checkpointing + the fixed
+StepWatchdog/GC satellites.
+
+The load-bearing property: a training run is bitwise invariant to the
+worker count — derived balanced batch slices (data.pipeline), per-row
+gradients reduced in canonical global row order (training.elastic) — so
+the supervisor's shrink-on-failure resume reproduces an uninterrupted
+run exactly.  These tests pin each layer in-process (subprocess
+end-to-end lives in tests/test_supervisor.py).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.checkpoint.async_store import AsyncCheckpointStore
+from repro.data.pipeline import (DataConfig, global_batch_at, host_batch_at,
+                                 host_row_bounds)
+from repro.distributed.fault_tolerance import (Heartbeat, StepWatchdog,
+                                               read_heartbeat)
+from repro.models.transformer import ModelConfig, init_params
+from repro.optim import adamw
+from repro.optim.adamw import OptConfig
+from repro.training import elastic
+
+TINY = ModelConfig("tiny", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                   d_ff=128, vocab=128)
+DATA = DataConfig(vocab=128, seq_len=16, global_batch=5)   # 5: won't divide
+
+
+# ---------------------------------------------------------------------------
+# elastic batch determinism
+# ---------------------------------------------------------------------------
+
+def test_host_slices_tile_global_batch_any_world_size():
+    for step in (0, 7):
+        full = np.asarray(global_batch_at(step, DATA)["tokens"])
+        for nh in (1, 2, 3, 4, 5):
+            parts = [np.asarray(host_batch_at(step, DATA, h, nh)["tokens"])
+                     for h in range(nh)]
+            assert sum(p.shape[0] for p in parts) == DATA.global_batch
+            np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_host_batch_sequence_survives_shrink_and_regrow():
+    """A 4->3->4 worker run consumes the bit-identical global batch
+    sequence: reassembling the per-host slices at each step matches the
+    fixed global sequence regardless of the world-size schedule."""
+    world = {0: 4, 1: 4, 2: 3, 3: 3, 4: 4}          # shrink at 2, regrow at 4
+    for step, nh in world.items():
+        full = np.asarray(global_batch_at(step, DATA)["tokens"])
+        got = np.concatenate(
+            [np.asarray(host_batch_at(step, DATA, h, nh)["tokens"])
+             for h in range(nh)])
+        np.testing.assert_array_equal(got, full)
+
+
+def test_host_row_bounds_validation():
+    with pytest.raises(ValueError):
+        host_row_bounds(8, 0, 0)
+    with pytest.raises(ValueError):
+        host_row_bounds(8, 3, 3)
+
+
+def test_param_pspecs_refit_on_shrunk_mesh_falls_back():
+    """Re-fitting shardings on a shrunk mesh whose axis no longer divides
+    the params must degrade to replication, not raise."""
+    from repro.distributed import sharding
+
+    class FakeMesh:
+        shape = {"data": 3, "model": 3}             # 3 divides nothing below
+
+    from jax.sharding import PartitionSpec
+    params = init_params(jax.random.PRNGKey(0), TINY)
+    specs = sharding.param_pspecs(params, FakeMesh(), multi_pod=False,
+                                  strategy="fsdp")
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda s: isinstance(s, PartitionSpec))
+    assert leaves, "no specs produced"
+    for spec in leaves:
+        assert isinstance(spec, PartitionSpec)
+        for axis in spec:
+            assert axis is None, f"non-dividing mesh kept sharding {spec}"
+
+
+# ---------------------------------------------------------------------------
+# regroup-invariant gradients: H workers == 1 worker, bit for bit
+# ---------------------------------------------------------------------------
+
+def _simulated_group_step(params, opt_state, row_grads, update, step, nh):
+    """One update as an nh-worker group would compute it: per-host padded
+    row grads, allgather simulated by concatenation in host order."""
+    max_r = elastic.max_host_rows(DATA.global_batch, nh)
+    per_host = []
+    for h in range(nh):
+        rows = host_batch_at(step, DATA, h, nh)["tokens"]
+        pad = max_r - rows.shape[0]
+        if pad:
+            rows = np.concatenate(
+                [rows, np.zeros((pad, rows.shape[1]), rows.dtype)])
+        per_host.append(row_grads(params, rows))
+    losses = np.concatenate([np.asarray(l) for l, _ in per_host])
+    grads = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
+        *[g for _, g in per_host])
+    valid = np.asarray(elastic.valid_row_mask(DATA.global_batch, nh))
+    return update(params, opt_state, losses, grads, valid,
+                  global_batch=DATA.global_batch)
+
+
+@pytest.mark.parametrize("nh", [2, 3, 5])
+def test_elastic_update_bitwise_invariant_to_world_size(nh):
+    opt_cfg = OptConfig(lr_peak=3e-4, warmup_steps=2, total_steps=4)
+    row_grads = elastic.make_row_grad_fn(TINY)
+    update = elastic.make_ordered_update_fn(TINY, opt_cfg)
+
+    p_ref = init_params(jax.random.PRNGKey(0), TINY)
+    s_ref = adamw.init_state(p_ref, opt_cfg)
+    p_h, s_h = p_ref, s_ref
+    for step in range(2):
+        p_ref, s_ref, _ = _simulated_group_step(p_ref, s_ref, row_grads,
+                                                update, step, 1)
+        p_h, s_h, _ = _simulated_group_step(p_h, s_h, row_grads,
+                                            update, step, nh)
+    for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                    jax.tree_util.tree_leaves(p_h)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_loop_resume_matches_uninterrupted(tmp_path):
+    """Kill-free sanity of the loop's own resume: 4 steps straight vs
+    2 steps, 'restart' (fresh call restores from ckpt), 2 more."""
+    opt_cfg = OptConfig(lr_peak=3e-4, warmup_steps=2, total_steps=4)
+    from repro.distributed.fault_tolerance import RestartPolicy
+    p_ref, _, _ = elastic.elastic_train_loop(TINY, opt_cfg, DATA, 4,
+                                             verbose=False)
+    ck = str(tmp_path / "ck")
+    pol = RestartPolicy(ckpt_every=2)
+    elastic.elastic_train_loop(TINY, opt_cfg, DATA, 2, ckpt_dir=ck,
+                               policy=pol, verbose=False)
+    p_res, _, _ = elastic.elastic_train_loop(TINY, opt_cfg, DATA, 4,
+                                             ckpt_dir=ck, policy=pol,
+                                             verbose=False)
+    for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                    jax.tree_util.tree_leaves(p_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# StepWatchdog hygiene (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_step_watchdog_restores_previous_handler_and_timer():
+    import signal as sig
+    fired = []
+    prev = sig.signal(sig.SIGALRM, lambda *a: fired.append("outer"))
+    try:
+        sig.setitimer(sig.ITIMER_REAL, 5.0)         # enclosing timer
+        with StepWatchdog(1.0):
+            pass
+        assert sig.getsignal(sig.SIGALRM) is not None
+        handler = sig.getsignal(sig.SIGALRM)
+        assert handler not in (sig.SIG_DFL, sig.SIG_IGN)
+        assert "outer" in repr(handler) or callable(handler)
+        left, _ = sig.setitimer(sig.ITIMER_REAL, 0.0)
+        # the enclosing timer was re-armed with (about) its remaining time
+        assert 0.0 < left <= 5.0
+    finally:
+        sig.setitimer(sig.ITIMER_REAL, 0.0)
+        sig.signal(sig.SIGALRM, prev)
+
+
+def test_step_watchdog_fires_and_then_restores():
+    import signal as sig
+    prev = sig.getsignal(sig.SIGALRM)
+    with pytest.raises(TimeoutError):
+        with StepWatchdog(0.05):
+            time.sleep(2.0)
+    assert sig.getsignal(sig.SIGALRM) == prev
+    assert sig.setitimer(sig.ITIMER_REAL, 0.0)[0] == 0.0   # no timer leaked
+
+
+def test_step_watchdog_rejects_non_main_thread():
+    err = []
+
+    def arm():
+        try:
+            with StepWatchdog(1.0):
+                pass
+        except RuntimeError as e:
+            err.append(str(e))
+
+    t = threading.Thread(target=arm)
+    t.start()
+    t.join()
+    assert err and "main thread" in err[0]
+
+
+def test_step_watchdog_disabled_is_free_anywhere():
+    t = threading.Thread(target=lambda: StepWatchdog(None).__enter__())
+    t.start()
+    t.join()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint GC by *valid* steps (satellite 2)
+# ---------------------------------------------------------------------------
+
+def _tree(v):
+    return {"w": np.full((4,), v, np.float32)}
+
+
+def test_gc_ignores_partial_dirs_and_keeps_newest_valid(tmp_path):
+    ck = str(tmp_path)
+    for s in (2, 4, 6):
+        store.save(ck, s, _tree(s), keep=10)
+    # newer junk above the newest valid step: a manifest-less partial dir
+    # and an in-flight .tmp dir
+    os.makedirs(os.path.join(ck, "step_00000008"))
+    os.makedirs(os.path.join(ck, "step_00000010.tmp"))
+    store._gc(ck, keep=2)
+    kept = sorted(os.listdir(ck))
+    assert "step_00000002" not in kept          # pruned: beyond keep=2
+    assert "step_00000004" in kept and "step_00000006" in kept
+    assert "step_00000008" in kept              # partial: untouched
+    assert "step_00000010.tmp" in kept          # in-flight: untouched
+    # newest *valid* step still restores
+    step, tree = store.restore_latest(ck, _tree(0))
+    assert step == 6 and tree["w"][0] == 6.0
+
+
+def test_gc_partial_dirs_do_not_consume_keep_slots(tmp_path):
+    ck = str(tmp_path)
+    store.save(ck, 2, _tree(2), keep=10)
+    for s in (4, 6, 8):
+        os.makedirs(os.path.join(ck, f"step_{s:08d}"))   # manifest-less
+    store._gc(ck, keep=1)
+    # the single valid step survives even though 3 newer partials exist
+    step, _ = store.restore_latest(ck, _tree(0))
+    assert step == 2
+
+
+def test_gc_keep_nonpositive_is_noop(tmp_path):
+    ck = str(tmp_path)
+    for s in (2, 4):
+        store.save(ck, s, _tree(s), keep=0)
+    assert {"step_00000002", "step_00000004"} <= set(os.listdir(ck))
+
+
+# ---------------------------------------------------------------------------
+# async checkpoint store (tentpole, checkpoint side)
+# ---------------------------------------------------------------------------
+
+def test_async_store_equivalent_to_sync(tmp_path):
+    sync_dir, async_dir = str(tmp_path / "s"), str(tmp_path / "a")
+    trees = {s: _tree(s) for s in (2, 4, 6)}
+    for s, t in trees.items():
+        store.save(sync_dir, s, t, keep=3)
+    with AsyncCheckpointStore(async_dir, keep=3) as a:
+        for s, t in trees.items():
+            a.save(s, t)
+        a.wait()
+        assert a.published == [2, 4, 6]
+    for d in (sync_dir, async_dir):
+        step, tree = store.restore_latest(d, _tree(0))
+        assert step == 6
+        np.testing.assert_array_equal(tree["w"], trees[6]["w"])
+
+
+def test_async_store_snapshot_is_a_copy(tmp_path):
+    """Mutating the source tree after save() must not corrupt the write
+    (donated device buffers are reused by the very next step)."""
+    a = AsyncCheckpointStore(str(tmp_path), keep=3)
+    src = _tree(1.0)
+    a.save(2, src)
+    src["w"][:] = -99.0          # "the next train step reused the buffer"
+    a.wait()
+    a.close()
+    _, tree = store.restore_latest(str(tmp_path), _tree(0))
+    np.testing.assert_array_equal(tree["w"], np.full((4,), 1.0, np.float32))
+
+
+def test_async_store_bounded_queue_blocks_instead_of_dropping(tmp_path):
+    orig_save = store.save
+
+    def slow_save(*a, **kw):
+        time.sleep(0.3)
+        return orig_save(*a, **kw)
+
+    store.save = slow_save
+    try:
+        a = AsyncCheckpointStore(str(tmp_path), keep=10, max_inflight=1)
+        a.save(1, _tree(1))      # writer picks this up
+        t0 = time.perf_counter()
+        a.save(2, _tree(2))      # fills the queue slot
+        a.save(3, _tree(3))      # must BLOCK until 2 drains
+        blocked = time.perf_counter() - t0
+        a.wait()
+        a.close()
+    finally:
+        store.save = orig_save
+    assert blocked > 0.15, f"save() returned in {blocked:.3f}s — dropped?"
+    assert sorted(a.published) == [1, 2, 3]      # nothing dropped
+    step, _ = store.restore_latest(str(tmp_path), _tree(0))
+    assert step == 3
+
+
+def test_async_store_surfaces_writer_errors(tmp_path):
+    target = str(tmp_path / "not_a_dir")
+    with open(target, "w") as f:
+        f.write("occupied")     # makedirs inside store.save will explode
+    a = AsyncCheckpointStore(target, keep=3)
+    a.save(2, _tree(2))
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        a.wait()
+    a.close()                   # writer thread survived the error
+
+
+def test_crash_mid_async_write_restores_last_valid(tmp_path):
+    """A process that dies mid-async-write leaves a .tmp dir (the writer
+    never got to the atomic rename); restore falls back to the last
+    published step."""
+    ck = str(tmp_path)
+    with AsyncCheckpointStore(ck, keep=3) as a:
+        a.save(2, _tree(2))
+        a.wait()
+    # simulate the torn in-flight write of step 4
+    torn = os.path.join(ck, "step_00000004.tmp")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "leaf_00000.npy"), "wb") as f:
+        f.write(b"\x93NUMPY partial garbage")
+    step, tree = store.restore_latest(ck, _tree(0))
+    assert step == 2
+    np.testing.assert_array_equal(tree["w"], _tree(2)["w"])
+
+
+def test_trainer_async_ckpt_parity(tmp_path):
+    """train_loop(async_ckpt=True) publishes the same checkpoints as the
+    sync path (and the barrier makes the final one durable)."""
+    from repro.distributed.fault_tolerance import RestartPolicy
+    from repro.training.trainer import train_loop
+    opt_cfg = OptConfig(lr_peak=3e-4, warmup_steps=2, total_steps=4)
+    pol = RestartPolicy(ckpt_every=2)
+    outs = {}
+    for mode, use_async in (("sync", False), ("async", True)):
+        ck = str(tmp_path / mode)
+        p, o, _ = train_loop(TINY, opt_cfg, DATA, 4, ckpt_dir=ck,
+                             policy=pol, verbose=False,
+                             async_ckpt=use_async)
+        step, tree = store.restore_latest(ck, {"params": p, "opt": o})
+        assert step == 4
+        outs[mode] = tree["params"]
+    for a, b in zip(jax.tree_util.tree_leaves(outs["sync"]),
+                    jax.tree_util.tree_leaves(outs["async"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# heartbeats
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_roundtrip_and_phases(tmp_path):
+    path = str(tmp_path / "hb.json")
+    assert read_heartbeat(path) is None
+    hb = Heartbeat(path, host_id=3)
+    hb.beat(7)
+    rec = read_heartbeat(path)
+    assert rec["host_id"] == 3 and rec["step"] == 7
+    assert rec["phase"] == "step" and rec["t"] <= time.time()
+    hb.beat(7, "sync")
+    assert read_heartbeat(path)["phase"] == "sync"
+    hb.done(8)
+    assert read_heartbeat(path)["phase"] == "done"
+    with pytest.raises(ValueError):
+        hb.beat(9, "nonsense")

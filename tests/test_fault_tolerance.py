@@ -117,7 +117,12 @@ def test_subprocess_kill_resumes_bit_identical(tmp_path):
     try:
         deadline = time.time() + 300
         while time.time() < deadline:
-            if glob.glob(os.path.join(td, "step_*")) or proc.poll() is not None:
+            # wait for a *published* step — the glob must not match an
+            # in-flight step_*.tmp, or the SIGKILL below can land mid-write
+            # and leave no durable checkpoint at all
+            published = [d for d in glob.glob(os.path.join(td, "step_*"))
+                         if not d.endswith(".tmp")]
+            if published or proc.poll() is not None:
                 break
             time.sleep(0.05)
         else:
